@@ -1,0 +1,54 @@
+"""Shared benchmark plumbing: timing, CSV emission, standard deployments."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+from typing import Callable, Dict, List
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+ARTIFACTS.mkdir(exist_ok=True)
+
+_rows: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _rows.append(row)
+    print(row, flush=True)
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6  # microseconds
+
+
+def rows() -> List[str]:
+    return list(_rows)
+
+
+def saturation_trace(n=250, seed=17):
+    """The paper's 1.634 conv/s point: paced to the prefiller's exact
+    saturation throughput."""
+    from repro.traces import TraceConfig, generate_trace
+    return generate_trace(n, 1.634, TraceConfig(seed=seed),
+                          arrival_process="paced")
+
+
+def run_system(system: str, trace, *, heterogeneous=False, wrong=0.10,
+               slo=None):
+    from repro.cluster import paper_deployment
+    from repro.core.metrics import summarize
+    sim = paper_deployment(system, heterogeneous=heterogeneous,
+                           wrong_prediction_rate=wrong)
+    sim.submit(trace).run()
+    total = sum(c.total_input_tokens + c.total_output_tokens for c in trace)
+    return summarize(sim.results(), slo=slo,
+                     energy_joules=sim.total_energy_j(),
+                     total_tokens=total), sim

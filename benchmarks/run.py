@@ -1,0 +1,45 @@
+"""Benchmark harness entrypoint: one function per paper figure/table plus
+the roofline analysis over dry-run artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig10]
+Prints `name,us_per_call,derived` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import figures, roofline
+    from .common import emit
+
+    fns = list(figures.ALL)
+    if args.only:
+        fns = [f for f in fns if args.only in f.__name__]
+    failures = 0
+    for fn in fns:
+        try:
+            fn()
+        except Exception as e:  # report and continue — partial CSV beats none
+            failures += 1
+            print(f"BENCH-FAIL {fn.__name__}: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            traceback.print_exc(limit=3)
+    if not args.only or "roofline" in (args.only or ""):
+        try:
+            roofline.main(emit=emit)
+        except Exception as e:
+            failures += 1
+            print(f"BENCH-FAIL roofline: {e}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Heterogeneous-tier serving (Fig. 13): map the compute-bound turn-1
+prefill to the full-power tier and the memory-bound tail to power-capped
+decoders; also demonstrates fault recovery and observation-driven
+autoscaling in the same run.
+
+    PYTHONPATH=src python examples/heterogeneous_serving.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.cluster import (A40, A40_CAPPED, Autoscaler, AutoscalerConfig,
+                           NodeCostModel, ServedModelProfile, build_cluster,
+                           paper_deployment)
+from repro.core import make_scheduler
+from repro.core.metrics import summarize
+from repro.traces import TraceConfig, generate_trace
+
+
+def main():
+    trace = generate_trace(200, 1.634, TraceConfig(seed=19),
+                           arrival_process="paced")
+    total = sum(c.total_input_tokens + c.total_output_tokens for c in trace)
+
+    print("== homogeneous (300W everywhere) vs heterogeneous (200W decoders) ==")
+    res = {}
+    for het in (False, True):
+        sim = paper_deployment("conserve", heterogeneous=het)
+        sim.submit(trace).run()
+        res[het] = summarize(sim.results(), energy_joules=sim.total_energy_j(),
+                             total_tokens=total)
+        tag = "hetero" if het else "homog"
+        print(f"  {tag:7s} tok/J={res[het]['tokens_per_joule']:7.1f}  "
+              f"p95 TTFET={res[het]['ttfet_p95']:6.1f}s  "
+              f"lastTBT={res[het]['last_tbt_gmean']*1e3:5.1f}ms")
+    gain = res[True]["tokens_per_joule"] / res[False]["tokens_per_joule"] - 1
+    print(f"  energy-efficiency gain: {gain:+.1%} at ~unchanged latency\n")
+
+    print("== fault tolerance + elasticity on the heterogeneous pool ==")
+    sched = make_scheduler("conserve", straggler_factor=3.0)
+    sim = build_cluster(sched, n_prefill=1, n_decode=2,
+                        prefill_tier=A40, decode_tier=A40_CAPPED)
+    scaler = Autoscaler(sim, NodeCostModel(A40_CAPPED, ServedModelProfile()),
+                        AutoscalerConfig(check_interval_s=10.0,
+                                         kv_high_watermark=0.6,
+                                         provision_delay_s=15.0)).start()
+    sim.submit(trace)
+    sim.inject_failure(node_id=1, at_s=40.0)  # kill a decoder mid-run
+    sim.run()
+    recs = sim.results()
+    rec_n = sum(r.recovered for r in recs)
+    print(f"  completed {len(recs)}/{len(trace)} conversations; "
+          f"{rec_n} recovered by deterministic replay after the failure")
+    for line in sim.log[:4]:
+        print("   ", line)
+    for t, kind, info in scaler.events[:4]:
+        print(f"    t={t:.0f}s autoscaler: {kind} ({info})")
+
+
+if __name__ == "__main__":
+    main()

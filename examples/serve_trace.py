@@ -1,0 +1,49 @@
+"""Replay a paper-scale agentic trace through the calibrated cluster runtime
+and compare all four systems (ConServe, AMPD, Collocated, Full Disagg) at the
+saturation operating point — a compact reproduction of Fig. 10/12.
+
+    PYTHONPATH=src python examples/serve_trace.py [--n 250] [--rate paced]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.cluster import paper_deployment
+from repro.core.metrics import summarize
+from repro.traces import TraceConfig, generate_trace
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=250)
+    ap.add_argument("--rate", default="paced",
+                    help="'paced' (saturation) or a conv/s float")
+    ap.add_argument("--wrong", type=float, default=0.10,
+                    help="AMPD wrong-prediction rate")
+    args = ap.parse_args()
+
+    if args.rate == "paced":
+        trace = generate_trace(args.n, 1.634, TraceConfig(seed=17),
+                               arrival_process="paced")
+    else:
+        trace = generate_trace(args.n, float(args.rate), TraceConfig(seed=17))
+    total = sum(c.total_input_tokens + c.total_output_tokens for c in trace)
+    print(f"trace: {args.n} conversations, {total/1e6:.1f}M tokens, "
+          f"arrivals={args.rate}")
+
+    print(f"\n{'system':<13}{'TTFET g/p95 (s)':>20}{'lastTBT (ms)':>14}"
+          f"{'E2E g (s)':>11}{'tok/J':>8}{'xfer/conv':>11}")
+    for system in ("conserve", "ampd", "collocated", "full_disagg"):
+        sim = paper_deployment(system, wrong_prediction_rate=args.wrong)
+        sim.submit(trace).run()
+        s = summarize(sim.results(), energy_joules=sim.total_energy_j(),
+                      total_tokens=total)
+        print(f"{system:<13}{s['ttfet_gmean']:>9.1f}/{s['ttfet_p95']:>9.1f}"
+              f"{s['last_tbt_gmean']*1e3:>14.1f}{s['e2e_gmean']:>11.1f}"
+              f"{s['tokens_per_joule']:>8.1f}{s['kv_transfers_per_conv']:>11.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .hardware import (A40, A40_CAPPED, TPU_V5E, TPU_V5E_CAPPED, HardwareTier,
+                       NodeCostModel, ServedModelProfile)
+from .simulator import ClusterSimulator, SimNode
+from .deployment import build_cluster, paper_deployment
+from .elastic import Autoscaler, AutoscalerConfig

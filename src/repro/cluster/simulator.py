@@ -1,0 +1,469 @@
+"""Discrete-event cluster simulator for conversation-level serving.
+
+The simulator owns all *mechanism* — prefill queues, continuous-batching
+decode iterations, chunked prefill interleave, KV transfers, tool-call
+timers, prefix caches, energy integration, failures — and delegates every
+*placement* decision to a `repro.core.Scheduler` through the observable
+`ClusterView` only. The same scheduler classes drive the real JAX engine
+(`repro.engine`), so policy code is exercised identically at both scales.
+
+Fidelity notes (mapped to the paper):
+ * Prefiller: FIFO job queue; job latency from the offline-profiled curve
+   (§3.1); chunked so energy/util integrate smoothly.
+ * Decoder: iteration-level continuous batching. Iteration latency from
+   NodeCostModel.decode_iteration_s(batch, active KV bytes, prefill chunk)
+   — reproducing Fig. 4/5 (memory saturation, collocation interference,
+   prefix-cache effects).
+ * Remote turn-2+ prefill (AMPD-wrong / FullDisagg) pays the bidirectional
+   KV move (§2.2) and, for FullDisagg, the full-context recompute.
+ * Failures: a dead decoder's conversations recover by deterministic replay
+   — re-prefill the journaled context on the prefiller and rebind; exactly
+   ConServe's one-shot mechanism, reused (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.conversation import Conversation, TurnView, view_of
+from repro.core.metrics import ConversationRecord, TurnRecord
+from repro.core.scheduler import Scheduler
+from repro.core.signals import ClusterView, NodeState
+
+from .hardware import NodeCostModel
+
+
+# --------------------------------------------------------------------------- #
+# Node runtime state
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class PrefillJob:
+    cid: int
+    turn_idx: int
+    n_tokens: int            # tokens to (re)compute
+    context_tokens: int      # total context after this prefill
+    enqueued_s: float
+    on_done: Callable[[float], None]
+    extra_busy_s: float = 0.0  # KV I/O the node stalls on (remote turns: the
+    #                            inbound history read + outbound write-back,
+    #                            §5.5's "memory-heavy work on the prefiller")
+
+
+@dataclasses.dataclass
+class DecodeJob:
+    cid: int
+    turn_idx: int
+    remaining_prefill: int   # append tokens still to chunk through
+    remaining_decode: int
+    context_tokens: int      # current KV length for this conversation
+    turn_arrival_s: float
+    first_token_s: Optional[float] = None
+    cold_prefix: bool = False
+
+
+@dataclasses.dataclass
+class SimNode:
+    node_id: int
+    role: str                          # "prefill" | "decode" | "mixed"
+    cost: NodeCostModel
+    state: NodeState = None
+    prefill_q: List[PrefillJob] = dataclasses.field(default_factory=list)
+    decode_jobs: Dict[int, DecodeJob] = dataclasses.field(default_factory=dict)
+    busy_until_s: float = 0.0
+    iterating: bool = False
+    slow_factor: float = 1.0           # straggler injection
+    alive: bool = True
+    # energy accounting
+    energy_j: float = 0.0
+    last_energy_t: float = 0.0
+    busy_s: float = 0.0
+
+    def integrate_energy(self, now: float, active_power_w: float):
+        dt = max(now - self.last_energy_t, 0.0)
+        self.energy_j += dt * active_power_w
+        self.last_energy_t = now
+
+
+# --------------------------------------------------------------------------- #
+# Simulator
+# --------------------------------------------------------------------------- #
+class ClusterSimulator:
+    def __init__(self, scheduler: Scheduler, nodes: List[SimNode],
+                 chunk_tokens: int = 8192, decoder_chunk_tokens: int = 2944,
+                 track_token_times: bool = False):
+        self.sched = scheduler
+        self.nodes = {n.node_id: n for n in nodes}
+        for n in nodes:
+            cap = n.cost.kv_capacity_tokens()
+            n.state = NodeState(node_id=n.node_id, role=n.role,
+                                kv_capacity_tokens=cap)
+        self.chunk_tokens = chunk_tokens
+        self.decoder_chunk_tokens = decoder_chunk_tokens
+        self.track_token_times = track_token_times
+        curve = nodes[0].cost.prefill_curve()
+        self.view = ClusterView({n.node_id: n.state for n in nodes}, curve)
+
+        self._events: List[Tuple[float, int, Callable]] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self.records: Dict[int, ConversationRecord] = {}
+        self._convs: Dict[int, Conversation] = {}
+        self._bound: Dict[int, int] = {}
+        self._turn_recs: Dict[int, List[TurnRecord]] = {}
+        self.kv_transfer_bytes = 0.0
+        self.n_kv_transfers = 0
+        self.bind_counts: Dict[int, int] = {}
+        self.log: List[str] = []
+
+    # ----- event plumbing ------------------------------------------------------
+    def at(self, t: float, fn: Callable):
+        heapq.heappush(self._events, (max(t, self.now), next(self._seq), fn))
+
+    def run(self, until: Optional[float] = None):
+        while self._events:
+            t, _, fn = heapq.heappop(self._events)
+            if until is not None and t > until:
+                break
+            self.now = t
+            fn()
+        # flush idle energy to the end of the run
+        for n in self.nodes.values():
+            n.integrate_energy(self.now, n.cost.tier.idle_w)
+        return self
+
+    # ----- workload entry -------------------------------------------------------
+    def submit(self, convs: List[Conversation]):
+        for c in convs:
+            self._convs[c.cid] = c
+            self.records[c.cid] = ConversationRecord(c.cid, c.arrival_s)
+            self._turn_recs[c.cid] = []
+            self.at(c.arrival_s, lambda c=c: self._on_arrival(c))
+        return self
+
+    # ----- arrival / prefill ------------------------------------------------------
+    def _on_arrival(self, conv: Conversation):
+        pl = self.sched.place_first_prefill(view_of(conv), self.view)
+        node = self.nodes[pl.node_id]
+        mixed = node.node_id if node.role == "mixed" else None
+        job = PrefillJob(
+            cid=conv.cid, turn_idx=0, n_tokens=conv.first_input_len,
+            context_tokens=conv.first_input_len, enqueued_s=self.now,
+            on_done=lambda t, conv=conv: self._after_first_prefill(
+                conv, t, mixed_node=mixed))
+        self._enqueue_prefill(node, job)
+
+    def _enqueue_prefill(self, node: SimNode, job: PrefillJob):
+        node.state.queued_prefill_tokens += job.n_tokens
+        if node.role == "mixed":
+            # collocated: prefill chunks ride the decode iterations
+            dj = DecodeJob(cid=job.cid, turn_idx=job.turn_idx,
+                           remaining_prefill=job.n_tokens, remaining_decode=0,
+                           context_tokens=job.context_tokens,
+                           turn_arrival_s=job.enqueued_s, cold_prefix=True)
+            dj._prefill_done = job.on_done  # type: ignore[attr-defined]
+            node.decode_jobs[(job.cid << 8) + job.turn_idx] = dj
+            self._kick_iteration(node)
+        else:
+            node.prefill_q.append(job)
+            self._kick_prefiller(node)
+
+    def _kick_prefiller(self, node: SimNode):
+        if node.iterating or not node.prefill_q or not node.alive:
+            return
+        node.iterating = True
+        job = node.prefill_q.pop(0)
+        dur = node.cost.prefill_s(job.context_tokens,
+                                  cached_prefix=job.context_tokens - job.n_tokens)
+        dur = dur * node.slow_factor + job.extra_busy_s
+        node.integrate_energy(self.now, node.cost.tier.idle_w)
+
+        def done():
+            node.integrate_energy(
+                self.now, node.cost.power_w(1.0, memory_bound=False))
+            node.busy_s += dur
+            node.state.queued_prefill_tokens -= job.n_tokens
+            node.iterating = False
+            job.on_done(self.now)
+            self._kick_prefiller(node)
+
+        self.at(self.now + dur, done)
+
+    def _after_first_prefill(self, conv: Conversation, t: float,
+                             mixed_node: Optional[int] = None):
+        if mixed_node is not None:
+            # collocated: the conversation already lives on the mixed replica
+            self._bound[conv.cid] = mixed_node
+            self.at(t, lambda: self._start_turn(conv, 0, mixed_node,
+                                                arrival_t=conv.arrival_s))
+            return
+        pl = self.sched.bind_decoder(view_of(conv), self.view)
+        dec = self.nodes[pl.node_id]
+        self._bound[conv.cid] = pl.node_id
+        self.bind_counts[pl.node_id] = self.bind_counts.get(pl.node_id, 0) + 1
+        self.records[conv.cid].n_kv_transfers += int(pl.kv_transfer)
+        delay = 0.0
+        if pl.kv_transfer:
+            delay = self._transfer(conv.first_input_len, dec)
+        self.at(t + delay, lambda: self._start_turn(
+            conv, 0, pl.node_id, arrival_t=conv.arrival_s))
+
+    def _transfer(self, n_tokens: int, node: SimNode) -> float:
+        self.n_kv_transfers += 1
+        self.kv_transfer_bytes += n_tokens * node.cost.model.kv_bytes_per_token
+        return node.cost.kv_transfer_s(n_tokens)
+
+    # ----- turns -----------------------------------------------------------------
+    def _start_turn(self, conv: Conversation, turn_idx: int, node_id: int,
+                    prefilled: bool = True, cold: bool = False,
+                    arrival_t: Optional[float] = None):
+        """Begin decoding turn `turn_idx` on `node_id`. If not `prefilled`,
+        the turn's append tokens still need (chunked) prefill on the node.
+        `arrival_t` is when the turn became RUNNABLE (tool returned /
+        conversation arrived) — queue and transfer waits count toward its
+        TTFT."""
+        node = self.nodes[node_id]
+        turn = conv.turns[turn_idx]
+        ctx = sum(t.append_tokens + t.output_tokens
+                  for t in conv.turns[: turn_idx + 1]) - turn.output_tokens
+        if turn_idx == 0:
+            node.state.active_kv_tokens += conv.first_input_len
+            node.state.active_conversations += 1
+        dj = DecodeJob(cid=conv.cid, turn_idx=turn_idx,
+                       remaining_prefill=0 if prefilled else turn.append_tokens,
+                       remaining_decode=turn.output_tokens,
+                       context_tokens=ctx,
+                       turn_arrival_s=self.now if arrival_t is None
+                       else arrival_t,
+                       cold_prefix=cold)
+        node.decode_jobs[(conv.cid << 8) + turn_idx] = dj
+        self._kick_iteration(node)
+
+    def _on_turn_tokens_done(self, node: SimNode, dj: DecodeJob):
+        conv = self._convs[dj.cid]
+        turn = conv.turns[dj.turn_idx]
+        rec = TurnRecord(turn_idx=dj.turn_idx, arrival_s=dj.turn_arrival_s,
+                         first_token_s=dj.first_token_s or self.now,
+                         last_token_s=self.now,
+                         n_output_tokens=turn.output_tokens)
+        self._turn_recs[conv.cid].append(rec)
+        node.state.active_kv_tokens += turn.output_tokens
+        if dj.turn_idx + 1 < conv.n_turns:
+            self.at(self.now + turn.tool_time_s,
+                    lambda: self._on_turn_arrival(conv, dj.turn_idx + 1))
+        else:
+            self._finish_conversation(conv, node)
+
+    def _finish_conversation(self, conv: Conversation, node: SimNode):
+        rec = self.records[conv.cid]
+        rec.turns = self._turn_recs[conv.cid]
+        node.state.active_kv_tokens -= conv.peak_context_tokens()
+        node.state.active_conversations -= 1
+        self.sched.on_conversation_end(conv.cid, self.view)
+
+    def _on_turn_arrival(self, conv: Conversation, turn_idx: int):
+        bound = self._bound[conv.cid]
+        if not self.nodes[bound].alive:
+            # tool returned to a dead binding: lazy recovery by replay
+            self._recover(conv, turn_idx)
+            return
+        turn = conv.turns[turn_idx]
+        ctx = sum(t.append_tokens + t.output_tokens
+                  for t in conv.turns[:turn_idx])
+        ready_t = self.now
+        tv = TurnView(cid=conv.cid, turn_idx=turn_idx,
+                      append_tokens=turn.append_tokens, context_tokens=ctx)
+        pl = self.sched.place_turn(tv, bound, self.view)
+        self.records[conv.cid].n_kv_transfers += int(pl.kv_transfer)
+        if pl.node_id == bound:
+            # local append-prefill, chunked into the decoder's iterations
+            node = self.nodes[bound]
+            node.state.active_kv_tokens += turn.append_tokens
+            self._start_turn(conv, turn_idx, bound, prefilled=False)
+            return
+        # remote turn prefill (AMPD wrong prediction / FullDisagg)
+        self.records[conv.cid].n_remote_turns += 1
+        pf = self.nodes[pl.node_id]
+        dec = self.nodes[bound]
+        dec.state.active_kv_tokens += turn.append_tokens
+        full_recompute = self.sched.name == "full_disagg"
+        n_new = (ctx + turn.append_tokens) if full_recompute else turn.append_tokens
+        # decoder -> prefiller history read + eventual write-back: this KV
+        # I/O occupies the prefiller (memory-heavy work mixed into its
+        # compute-bound pipeline — §5.5's utilization-drop mechanism)
+        t_out = self._transfer(ctx, pf) if pl.kv_transfer else 0.0
+        t_back = self._transfer(ctx + turn.append_tokens, dec) \
+            if pl.kv_transfer else 0.0
+        extra = 0.0 if full_recompute else t_out + t_back
+
+        def enqueue():
+            job = PrefillJob(
+                cid=conv.cid, turn_idx=turn_idx, n_tokens=n_new,
+                context_tokens=ctx + turn.append_tokens, enqueued_s=self.now,
+                on_done=lambda t: back(), extra_busy_s=extra)
+            self._enqueue_prefill(pf, job)
+
+        def back():
+            # prefiller -> decoder write-back of the new (and, for AMPD,
+            # reused) KV entries
+            self.at(self.now + t_back,
+                    lambda: self._start_turn(conv, turn_idx, bound,
+                                             prefilled=True,
+                                             arrival_t=ready_t))
+
+        self.at(self.now + t_out, enqueue)
+
+    # ----- decoder iterations -------------------------------------------------
+    def _kick_iteration(self, node: SimNode):
+        if node.iterating or not node.decode_jobs or not node.alive:
+            return
+        node.iterating = True
+        self._iterate(node)
+
+    def _iterate(self, node: SimNode):
+        if not node.decode_jobs or not node.alive:
+            node.iterating = False
+            return
+        jobs = list(node.decode_jobs.values())
+        decoding = [j for j in jobs if j.remaining_prefill == 0
+                    and j.remaining_decode > 0]
+        prefilling = [j for j in jobs if j.remaining_prefill > 0]
+        batch = len(decoding)
+        active_kv = sum(j.context_tokens for j in jobs)
+        chunk_budget = self.decoder_chunk_tokens if node.role != "prefill" \
+            else self.chunk_tokens
+        chunk = 0
+        cold = False
+        for j in prefilling:
+            take = min(j.remaining_prefill, chunk_budget - chunk)
+            chunk += take
+            cold = cold or j.cold_prefix
+            if chunk >= chunk_budget:
+                break
+        dur = node.cost.decode_iteration_s(batch, active_kv, chunk,
+                                           cached_chunk=not cold)
+        dur *= node.slow_factor
+        node.integrate_energy(self.now, node.cost.tier.idle_w)
+
+        def step_done():
+            if not node.alive:
+                node.iterating = False
+                return
+            node.integrate_energy(
+                self.now, node.cost.power_w(1.0, memory_bound=(batch > 0)))
+            node.busy_s += dur
+            # observable TBT signal (straggler detection reads this)
+            if batch:
+                ema = node.state.observed_tbt_ema_s
+                node.state.observed_tbt_ema_s = (0.9 * ema + 0.1 * dur) \
+                    if ema else dur
+            # consume prefill chunk
+            left = chunk
+            for j in list(prefilling):
+                take = min(j.remaining_prefill, left)
+                j.remaining_prefill -= take
+                left -= take
+                if getattr(j, "_prefill_done", None) is not None:
+                    # mixed-node turn-1 prefill counts toward the queue signal
+                    node.state.queued_prefill_tokens = max(
+                        0, node.state.queued_prefill_tokens - take)
+                if j.remaining_prefill == 0 and j.remaining_decode == 0:
+                    # collocated turn-1 prefill job completed
+                    cb = getattr(j, "_prefill_done", None)
+                    node.decode_jobs.pop((j.cid << 8) + j.turn_idx, None)
+                    if cb:
+                        cb(self.now)
+                if left <= 0:
+                    break
+            # emit one token per decoding sequence
+            for j in decoding:
+                if j.first_token_s is None:
+                    j.first_token_s = self.now
+                j.remaining_decode -= 1
+                j.context_tokens += 1
+                if j.remaining_decode == 0:
+                    node.decode_jobs.pop((j.cid << 8) + j.turn_idx, None)
+                    self._on_turn_tokens_done(node, j)
+            self._iterate(node)
+
+        self.at(self.now + dur, step_done)
+
+    # ----- faults / elasticity (observation-driven) ----------------------------
+    def inject_failure(self, node_id: int, at_s: float):
+        self.at(at_s, lambda: self._fail(node_id))
+
+    def _fail(self, node_id: int):
+        node = self.nodes[node_id]
+        node.alive = False
+        node.state.alive = False
+        victims = {j.cid for j in node.decode_jobs.values()}
+        node.decode_jobs.clear()
+        node.state.active_kv_tokens = 0
+        node.state.active_conversations = 0
+        self.log.append(f"t={self.now:.1f} node {node_id} FAILED; "
+                        f"recovering {len(victims)} in-flight conversations "
+                        f"by replay (tool-waiting ones recover lazily)")
+        for cid in victims:
+            conv = self._convs[cid]
+            done_turns = len(self._turn_recs[cid])
+            self._recover(conv, min(done_turns, conv.n_turns - 1))
+
+    def _recover(self, conv: Conversation, turn_idx: int):
+        """Deterministic replay: re-prefill the journaled context on the
+        prefiller, rebind to a healthy decoder (exactly ConServe's one-shot
+        mechanism), then resume the interrupted/pending turn."""
+        self.records[conv.cid].recovered = True
+        ctx = sum(t.append_tokens + t.output_tokens
+                  for t in conv.turns[:turn_idx]) \
+            + conv.turns[turn_idx].append_tokens
+        pl = self.sched.place_first_prefill(view_of(conv), self.view)
+        pf = self.nodes[pl.node_id]
+
+        def redo(t, conv=conv, turn_idx=turn_idx, ctx=ctx):
+            pl2 = self.sched.bind_decoder(view_of(conv), self.view)
+            dec2 = self.nodes[pl2.node_id]
+            self._bound[conv.cid] = pl2.node_id
+            self.bind_counts[pl2.node_id] = \
+                self.bind_counts.get(pl2.node_id, 0) + 1
+            dec2.state.active_kv_tokens += ctx
+            dec2.state.active_conversations += 1
+            delay = self._transfer(ctx, dec2) if pl2.kv_transfer else 0.0
+            self.at(t + delay,
+                    lambda: self._resume_turn(conv, turn_idx, pl2.node_id))
+
+        job = PrefillJob(cid=conv.cid, turn_idx=turn_idx, n_tokens=ctx,
+                         context_tokens=ctx, enqueued_s=self.now,
+                         on_done=redo)
+        self._enqueue_prefill(pf, job)
+
+    def _resume_turn(self, conv: Conversation, turn_idx: int, node_id: int):
+        node = self.nodes[node_id]
+        turn = conv.turns[turn_idx]
+        dj = DecodeJob(cid=conv.cid, turn_idx=turn_idx, remaining_prefill=0,
+                       remaining_decode=turn.output_tokens,
+                       context_tokens=sum(
+                           t.append_tokens + t.output_tokens
+                           for t in conv.turns[:turn_idx]) + turn.append_tokens,
+                       turn_arrival_s=self.now)
+        node.decode_jobs[(conv.cid << 8) + turn_idx] = dj
+        self._kick_iteration(node)
+
+    def add_decoder(self, cost: NodeCostModel) -> int:
+        nid = max(self.nodes) + 1
+        node = SimNode(node_id=nid, role="decode", cost=cost,
+                       last_energy_t=self.now)
+        cap = cost.kv_capacity_tokens()
+        node.state = NodeState(node_id=nid, role="decode",
+                               kv_capacity_tokens=cap)
+        self.nodes[nid] = node
+        self.view._nodes[nid] = node.state
+        self.log.append(f"t={self.now:.1f} scaled out: decoder {nid}")
+        return nid
+
+    # ----- results ----------------------------------------------------------------
+    def total_energy_j(self) -> float:
+        return sum(n.energy_j for n in self.nodes.values())
+
+    def results(self) -> List[ConversationRecord]:
+        return [r for r in self.records.values() if r.done]

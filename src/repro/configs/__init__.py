@@ -1,0 +1,44 @@
+"""Architecture config registry: one module per assigned architecture plus
+the paper's own served model (qwen3-0.6b). `get_config(arch)` returns the
+full published config; `get_reduced(arch)` the family-preserving smoke-test
+reduction."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig, reduced_config
+
+_MODULES = {
+    "gemma3-12b": "gemma3_12b",
+    "stablelm-12b": "stablelm_12b",
+    "nemotron-4-15b": "nemotron4_15b",
+    "olmo-1b": "olmo_1b",
+    "internvl2-26b": "internvl2_26b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b",
+    "rwkv6-3b": "rwkv6_3b",
+    "whisper-small": "whisper_small",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen3-0.6b": "qwen3_0p6b",
+}
+
+ASSIGNED: List[str] = [k for k in _MODULES if k != "qwen3-0.6b"]
+ALL_ARCHS: List[str] = list(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return reduced_config(get_config(arch))
+
+
+from .shapes import SHAPES, ShapeSpec, get_shape  # noqa: E402
+
+__all__ = ["get_config", "get_reduced", "ASSIGNED", "ALL_ARCHS", "SHAPES",
+           "ShapeSpec", "get_shape"]

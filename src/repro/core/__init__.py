@@ -1,0 +1,12 @@
+from .conversation import Conversation, ConversationView, Turn, TurnView, view_of
+from .scheduler import Placement, Scheduler, SCHEDULERS, make_scheduler
+from .conserve import ConServeScheduler
+from .baselines import AMPDScheduler, CollocatedScheduler, FullDisaggScheduler
+from .signals import ClusterView, NodeState, PrefillLatencyCurve
+from .provisioning import (NodeRates, WorkloadStats, min_decoders,
+                           paper_configuration, prefiller_saturation_rate,
+                           provision, slots_per_decoder)
+from .metrics import (ConversationRecord, SLOThresholds, TurnRecord, gmean,
+                      p95, per_turn_distributions, summarize)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

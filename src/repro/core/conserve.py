@@ -1,0 +1,50 @@
+"""ConServe: conversation-level disaggregated scheduling (§4).
+
+The whole policy, verbatim from the paper:
+  1. Turn-1 prefill routes to the prefiller (least-backlogged when several).
+  2. On prefill completion, bind to the decoder with the lowest *active* KV
+     occupancy; transfer the KV cache exactly once.
+  3. Every later turn executes on the bound decoder. No re-evaluation, no
+     migration, no learned cost model, no decode-side prediction — ever.
+
+Both signals read are direct observations (input-token counts; per-decoder
+KV occupancy). Straggler avoidance is also observational: decoders whose
+measured TBT drifts beyond k× the pool median stop receiving NEW bindings
+(already-placed conversations stay put — ConServe never migrates).
+"""
+from __future__ import annotations
+
+from .conversation import ConversationView, TurnView
+from .scheduler import Placement, Scheduler, register
+from .signals import ClusterView
+
+
+@register
+class ConServeScheduler(Scheduler):
+    name = "conserve"
+
+    def __init__(self, straggler_factor: float = 0.0):
+        # 0.0 disables straggler screening (paper's minimal policy);
+        # fault-tolerant deployments set e.g. 3.0.
+        self.straggler_factor = straggler_factor
+        self._bindings = {}
+
+    def place_first_prefill(self, conv: ConversationView,
+                            view: ClusterView) -> Placement:
+        return Placement(self.least_loaded_prefiller(view))
+
+    def bind_decoder(self, conv: ConversationView,
+                     view: ClusterView) -> Placement:
+        nid = self.min_kv_decoder(view, self.straggler_factor)
+        self._bindings[conv.cid] = nid
+        # the one and only KV movement this conversation will ever make
+        return Placement(nid, kv_transfer=True)
+
+    def place_turn(self, turn: TurnView, bound_decoder: int,
+                   view: ClusterView) -> Placement:
+        # Pinned for the conversation's lifetime: local append-prefill with
+        # full prefix-cache reuse, zero transfer.
+        return Placement(bound_decoder, kv_transfer=False)
+
+    def on_conversation_end(self, cid: int, view: ClusterView) -> None:
+        self._bindings.pop(cid, None)

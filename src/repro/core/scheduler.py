@@ -1,0 +1,93 @@
+"""Scheduler interface. The runtime (event simulator or the real JAX engine)
+invokes these callbacks; policies answer *where* work runs using only the
+observable ClusterView. The runtime owns all mechanism (queues, KV transfer,
+batching); schedulers own only placement.
+
+Decision points, per the paper's taxonomy:
+  * conversation arrival  -> which node runs the turn-1 prefill
+  * prefill completion    -> which decoder the conversation binds to
+  * turn 2+ arrival       -> which node runs the append-prefill (per-turn
+                             systems decide here; ConServe returns the pinned
+                             decoder unconditionally)
+  * conversation end      -> occupancy release (handled by runtime; hook
+                             provided for stateful policies)
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Dict, Optional
+
+from .conversation import ConversationView, TurnView
+from .signals import ClusterView
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    node_id: int
+    # Whether this placement requires moving KV state to `node_id` first
+    # (remote append-prefill in per-turn systems pays a bidirectional move).
+    kv_transfer: bool = False
+
+
+class Scheduler(abc.ABC):
+    """Base scheduler. Subclasses must be pure policies over ClusterView."""
+
+    name = "base"
+
+    @abc.abstractmethod
+    def place_first_prefill(self, conv: ConversationView,
+                            view: ClusterView) -> Placement:
+        ...
+
+    @abc.abstractmethod
+    def bind_decoder(self, conv: ConversationView,
+                     view: ClusterView) -> Placement:
+        """Called when the turn-1 prefill finishes; the returned decoder
+        receives the one-shot KV transfer and hosts the tail."""
+        ...
+
+    @abc.abstractmethod
+    def place_turn(self, turn: TurnView, bound_decoder: int,
+                   view: ClusterView) -> Placement:
+        ...
+
+    def on_conversation_end(self, cid: int, view: ClusterView) -> None:
+        pass
+
+    # -- shared helpers -------------------------------------------------------
+    @staticmethod
+    def least_loaded_prefiller(view: ClusterView) -> int:
+        pf = view.nodes("prefill")
+        if not pf:  # collocated deployments have no dedicated prefiller
+            pf = view.nodes("mixed")
+        return min(pf, key=lambda n: n.queued_prefill_tokens).node_id
+
+    @staticmethod
+    def min_kv_decoder(view: ClusterView, straggler_factor: float = 0.0) -> int:
+        """Decoder with lowest *active* KV occupancy (ties: fewest slots).
+        With straggler_factor > 0, decoders whose observed TBT exceeds
+        factor × pool median are excluded from NEW bindings — observation-
+        based straggler mitigation (no prediction involved)."""
+        ds = view.nodes("decode")
+        if straggler_factor:
+            med = view.median_decoder_tbt()
+            if med > 0:
+                healthy = [d for d in ds
+                           if d.observed_tbt_ema_s <= straggler_factor * med]
+                if healthy:
+                    ds = healthy
+        return min(ds, key=lambda n: (n.active_kv_tokens,
+                                      n.active_conversations)).node_id
+
+
+SCHEDULERS: Dict[str, type] = {}
+
+
+def register(cls):
+    SCHEDULERS[cls.name] = cls
+    return cls
+
+
+def make_scheduler(name: str, **kw) -> Scheduler:
+    return SCHEDULERS[name](**kw)

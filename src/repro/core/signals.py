@@ -1,0 +1,99 @@
+"""The two observable signals ConServe schedules on (§4.2), plus the
+restricted cluster view handed to schedulers.
+
+1. The prefill latency curve — profiled OFFLINE as a deterministic function
+   of input-token count (quadratic once attention dominates, §3.1). Given an
+   incoming conversation's first-turn prompt length the scheduler reads off
+   expected prefiller utilization in O(1).
+2. Per-decoder *active* KV-cache occupancy — decremented at conversation
+   termination so it reflects only live state. For recurrent-state families
+   (RWKV6 / RG-LRU) per-token growth is ~0 and the signal degenerates to the
+   active-slot count (DESIGN.md §4); both are exposed.
+
+Neither is a forecast; both are properties of state the system already
+maintains.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PrefillLatencyCurve:
+    """TTFT(L) = a·L² + b·L + c  (seconds). Fit from offline profiling; the
+    quadratic term captures attention, the linear term the projections."""
+    a: float
+    b: float
+    c: float
+
+    def latency_s(self, n_tokens: int) -> float:
+        L = float(n_tokens)
+        return self.a * L * L + self.b * L + self.c
+
+    @staticmethod
+    def fit(lengths: Sequence[int], latencies: Sequence[float]
+            ) -> Tuple["PrefillLatencyCurve", float]:
+        """Least-squares quadratic fit; returns (curve, R^2)."""
+        x = np.asarray(lengths, dtype=np.float64)
+        y = np.asarray(latencies, dtype=np.float64)
+        A = np.stack([x * x, x, np.ones_like(x)], axis=1)
+        coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+        pred = A @ coef
+        ss_res = float(((y - pred) ** 2).sum())
+        ss_tot = float(((y - y.mean()) ** 2).sum()) or 1e-12
+        return PrefillLatencyCurve(*coef), 1.0 - ss_res / ss_tot
+
+
+@dataclasses.dataclass
+class NodeState:
+    """Observable per-node state the runtime maintains and schedulers read."""
+    node_id: int
+    role: str  # "prefill" | "decode" | "mixed"
+    # prefill side
+    queued_prefill_tokens: int = 0
+    # decode side
+    active_kv_tokens: int = 0
+    active_conversations: int = 0
+    kv_capacity_tokens: int = 300_000
+    slot_capacity: int = 64
+    # health (observation-based straggler signal)
+    observed_tbt_ema_s: float = 0.0
+    alive: bool = True
+
+    @property
+    def kv_utilization(self) -> float:
+        return self.active_kv_tokens / max(self.kv_capacity_tokens, 1)
+
+
+class ClusterView:
+    """Read-only window onto observable cluster state. This is the ONLY
+    interface scheduler policies receive — placement decisions can condition
+    on nothing else (the paper's 'observation, not prediction' contract)."""
+
+    def __init__(self, nodes: Dict[int, NodeState],
+                 prefill_curve: PrefillLatencyCurve):
+        self._nodes = nodes
+        self.prefill_curve = prefill_curve
+
+    def nodes(self, role: Optional[str] = None) -> List[NodeState]:
+        out = [n for n in self._nodes.values() if n.alive]
+        if role:
+            out = [n for n in out if n.role == role]
+        return out
+
+    def node(self, node_id: int) -> NodeState:
+        return self._nodes[node_id]
+
+    def prefill_backlog_s(self, node_id: int) -> float:
+        """Expected time to drain a prefiller's queued input tokens — derived
+        from the offline curve, not from any prediction of decode behavior."""
+        n = self._nodes[node_id]
+        return self.prefill_curve.latency_s(max(n.queued_prefill_tokens, 0))
+
+    def median_decoder_tbt(self) -> float:
+        ds = [n.observed_tbt_ema_s for n in self.nodes("decode")
+              if n.observed_tbt_ema_s > 0]
+        return float(np.median(ds)) if ds else 0.0

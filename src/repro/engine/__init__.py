@@ -1,0 +1,3 @@
+from .kvcache import SlotKVCache
+from .replica import ReplicaEngine, bucket_len
+from .server import EngineServer

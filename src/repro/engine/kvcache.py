@@ -1,0 +1,182 @@
+"""Slot-based KV cache for the real JAX serving engine.
+
+TPU-native adaptation of vLLM's paged KV (DESIGN.md §3): each replica owns
+preallocated slot-major cache buffers — slot s is a contiguous max_ctx region
+per layer. Contiguous regions suit the TPU's large sequential HBM reads;
+page tables have no TPU analogue worth emulating. Conversations pin a slot
+for their lifetime (exactly ConServe's binding), lengths are tracked
+host-side, and reads beyond a slot's live length are masked via kv_lens.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+GROWING = ("k", "v", "ckv", "krope")
+
+
+def _is_growing(path) -> bool:
+    names = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+    return names[-1] in GROWING and "cross" not in names
+
+
+@partial(jax.jit, static_argnames=("slot", "length"))
+def _write_slot(cache_leaf, new_leaf, slot: int, length: int, grouped: bool):
+    """Write a prefilled (batch=1) cache into slot `slot` at [0, length)."""
+    if grouped:  # (G, B, L, ...) <- (G, 1, length, ...)
+        return jax.lax.dynamic_update_slice(
+            cache_leaf, new_leaf.astype(cache_leaf.dtype),
+            (0, slot, 0) + (0,) * (cache_leaf.ndim - 3))
+    return jax.lax.dynamic_update_slice(
+        cache_leaf, new_leaf.astype(cache_leaf.dtype),
+        (slot, 0) + (0,) * (cache_leaf.ndim - 2))
+
+
+class SlotKVCache:
+    """Owns the cache pytree (batch dim = n_slots) plus per-slot lengths."""
+
+    def __init__(self, model: Model, n_slots: int, max_ctx: int):
+        self.model = model
+        self.cfg = model.cfg
+        self.n_slots = n_slots
+        self.max_ctx = max_ctx
+        self.caches = model.init_cache(n_slots, max_ctx)
+        self.lengths = np.zeros(n_slots, np.int32)
+        self.active = np.zeros(n_slots, bool)
+        self._grouped = jax.tree_util.tree_map_with_path(
+            lambda p, l: l.ndim >= 4 and str(
+                getattr(p[0], "key", p[0])) in ("groups", "self", "cross"),
+            self.caches)
+        self._growing = jax.tree_util.tree_map_with_path(
+            lambda p, l: _is_growing(p), self.caches)
+
+    # ----- slot management -----------------------------------------------------
+    def acquire(self) -> int:
+        free = np.flatnonzero(~self.active)
+        if len(free) == 0:
+            raise RuntimeError("no free KV slots")
+        s = int(free[0])
+        self.active[s] = True
+        self.lengths[s] = 0
+        return s
+
+    def release(self, slot: int):
+        self.active[slot] = False
+        self.lengths[slot] = 0
+
+    @property
+    def active_kv_tokens(self) -> int:
+        return int(self.lengths[self.active].sum())
+
+    def kv_lens(self) -> jnp.ndarray:
+        return jnp.asarray(self.lengths)
+
+    def positions(self) -> jnp.ndarray:
+        return jnp.asarray(self.lengths)
+
+    # ----- writes ----------------------------------------------------------------
+    def write_prefill(self, slot: int, new_caches, length: int,
+                      state_slot_batch1: bool = True):
+        """Install a (batch=1) prefill result into `slot`: growing entries
+        are copied into [0(or prev_len), ...); fixed states replace the slot's
+        row. `length` = the slot's total live length afterwards."""
+        prev = int(self.lengths[slot])
+
+        def write(path, cache_leaf, new_leaf, grouped, growing):
+            if growing:
+                off = prev
+                if grouped:
+                    start = (0, slot, off) + (0,) * (cache_leaf.ndim - 3)
+                else:
+                    start = (slot, off) + (0,) * (cache_leaf.ndim - 2)
+                return jax.lax.dynamic_update_slice(
+                    cache_leaf, new_leaf.astype(cache_leaf.dtype), start)
+            # fixed-size state: replace slot row
+            if grouped:
+                start = (0, slot) + (0,) * (cache_leaf.ndim - 2)
+            else:
+                start = (slot,) + (0,) * (cache_leaf.ndim - 1)
+            return jax.lax.dynamic_update_slice(
+                cache_leaf, new_leaf.astype(cache_leaf.dtype), start)
+
+        self.caches = jax.tree_util.tree_map_with_path(
+            lambda p, c, n, g, gr: write(p, c, n, g, gr),
+            self.caches, new_caches, self._grouped, self._growing)
+        self.lengths[slot] = length
+
+    def append_step(self, updates, emitted_mask: np.ndarray):
+        """Fold one decode step's cache updates in: growing entries land at
+        each slot's current length; states replace. emitted_mask marks slots
+        that actually decoded (others keep their state)."""
+        lens = jnp.asarray(self.lengths)
+        mask = jnp.asarray(emitted_mask)
+
+        def fold(path, cache_leaf, up_leaf, grouped, growing):
+            if growing:
+                # (G?, B, L, ...) <- write up (G?, B, 1, ...) at per-slot lens
+                if grouped:
+                    idx_b = jnp.arange(self.n_slots)
+                    new = cache_leaf.at[:, idx_b, lens].set(
+                        jnp.where(
+                            mask.reshape((1, -1) + (1,) * (up_leaf.ndim - 3)),
+                            up_leaf[:, :, 0].astype(cache_leaf.dtype),
+                            cache_leaf[:, idx_b, lens]))
+                else:
+                    idx_b = jnp.arange(self.n_slots)
+                    new = cache_leaf.at[idx_b, lens].set(
+                        jnp.where(
+                            mask.reshape((-1,) + (1,) * (up_leaf.ndim - 2)),
+                            up_leaf[:, 0].astype(cache_leaf.dtype),
+                            cache_leaf[idx_b, lens]))
+                return new
+            # state: keep old where not emitted
+            bdim = 1 if grouped else 0
+            shape = [1] * cache_leaf.ndim
+            shape[bdim] = self.n_slots
+            m = mask.reshape(shape)
+            return jnp.where(m, up_leaf.astype(cache_leaf.dtype), cache_leaf)
+
+        self.caches = jax.tree_util.tree_map_with_path(
+            lambda p, c, u, g, gr: fold(p, c, u, g, gr),
+            self.caches, updates, self._grouped, self._growing)
+        self.lengths[emitted_mask] += 1
+
+    # ----- transfer --------------------------------------------------------------
+    def export_slot(self, slot: int) -> Dict[str, Any]:
+        """Extract one slot's live cache (for KV transfer between replicas)."""
+        length = int(self.lengths[slot])
+
+        def take(path, leaf, grouped, growing):
+            if growing:
+                return (leaf[:, slot: slot + 1, :length] if grouped
+                        else leaf[slot: slot + 1, :length])
+            return (leaf[:, slot: slot + 1] if grouped
+                    else leaf[slot: slot + 1])
+
+        tree = jax.tree_util.tree_map_with_path(
+            lambda p, l, g, gr: take(p, l, g, gr),
+            self.caches, self._grouped, self._growing)
+        return {"caches": tree, "length": length}
+
+    def import_slot(self, slot: int, package: Dict[str, Any]):
+        self.write_prefill(slot, package["caches"], package["length"])
+
+    def export_slot_full(self, slot: int):
+        """Full-buffer prefix view of a slot (right-padded beyond the live
+        length; callers mask with kv_lens + prefix_start=0)."""
+        def take(path, leaf, grouped, growing):
+            return leaf[:, slot:slot + 1] if grouped else leaf[slot:slot + 1]
+
+        return jax.tree_util.tree_map_with_path(
+            lambda p_, l, g, gr: take(p_, l, g, gr),
+            self.caches, self._grouped, self._growing)
+
+    def nbytes_of(self, package) -> int:
+        return sum(l.size * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(package["caches"]))

@@ -1,0 +1,117 @@
+"""A model replica: params + slot KV cache + jitted prefill/decode programs,
+with bucketed prefill lengths (bounded recompilation) and greedy sampling.
+Runs real forward passes on whatever devices are visible (CPU here; the same
+code paths pjit onto a mesh slice in production)."""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model, build_model
+from repro.models.config import ModelConfig
+
+from .kvcache import SlotKVCache
+
+PREFILL_BUCKETS = (32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+
+def bucket_len(n: int) -> int:
+    for b in PREFILL_BUCKETS:
+        if n <= b:
+            return b
+    return -(-n // 4096) * 4096
+
+
+class ReplicaEngine:
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
+                 max_ctx: int = 2048, replica_id: int = 0, role: str = "decode"):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.kv = SlotKVCache(self.model, n_slots, max_ctx)
+        self.replica_id = replica_id
+        self.role = role
+        self.exact_prefill = any(k in ("rwkv6", "rglru")
+                                 for k in cfg.block_pattern)
+        self.compute_s = 0.0  # accumulated measured compute time
+        self.n_prefill_tokens = 0
+        self.n_decode_tokens = 0
+
+        self._decode = jax.jit(
+            lambda p, t, c, pos, lens: self.model.decode_step(
+                p, t, c, pos, kv_lens=lens))
+
+    # ----- sampling -------------------------------------------------------------
+    def sample(self, logits) -> np.ndarray:
+        """Greedy over the true vocab (mask table padding)."""
+        logits = logits[..., : self.cfg.vocab_size]
+        return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+
+    # ----- prefill ----------------------------------------------------------------
+    def prefill_conversation(self, slot: int, tokens: np.ndarray,
+                             frontend_embeds=None) -> Tuple[np.ndarray, float]:
+        """Turn-1 prefill into `slot`. Returns (next_token, measured_s)."""
+        t0 = time.perf_counter()
+        true_len = len(tokens)
+        pad_to = true_len if self.exact_prefill else bucket_len(true_len)
+        toks = np.zeros(pad_to, np.int32)
+        toks[:true_len] = tokens
+        logits, caches = self.model.prefill(
+            self.params, jnp.asarray(toks)[None],
+            frontend_embeds=frontend_embeds,
+            logits_at=true_len - 1 if pad_to != true_len else None)
+        logits = jax.block_until_ready(logits)
+        n_front = 0
+        if self.cfg.frontend != "none" and frontend_embeds is not None:
+            n_front = frontend_embeds.shape[1]
+        self.kv.write_prefill(slot, caches, n_front + true_len)
+        dt = time.perf_counter() - t0
+        self.compute_s += dt
+        self.n_prefill_tokens += true_len
+        return self.sample(logits)[0], dt
+
+    def append_prefill(self, slot: int, tokens: np.ndarray
+                       ) -> Tuple[np.ndarray, float]:
+        """Turn-2+ prefill against the slot's cached prefix (local, prefix
+        cache hit — the ConServe fast path)."""
+        t0 = time.perf_counter()
+        true_len = len(tokens)
+        prev = int(self.kv.lengths[slot])
+        pad_to = true_len if self.exact_prefill else bucket_len(true_len)
+        toks = np.zeros(pad_to, np.int32)
+        toks[:true_len] = tokens
+        prefix = self.kv.export_slot_full(slot)
+        lens = jnp.asarray([prev], jnp.int32)
+        logits, caches = self.model.prefill(
+            self.params, jnp.asarray(toks)[None], caches=prefix,
+            start_pos=prev, kv_lens=lens, prefix_start=0,
+            logits_at=true_len - 1 if pad_to != true_len else None)
+        logits = jax.block_until_ready(logits)
+        self.kv.write_prefill(slot, caches, prev + true_len)
+        dt = time.perf_counter() - t0
+        self.compute_s += dt
+        self.n_prefill_tokens += true_len
+        return self.sample(logits)[0], dt
+
+    # ----- decode -----------------------------------------------------------------
+    def decode_step_all(self, next_tokens: np.ndarray,
+                        emit_mask: np.ndarray) -> Tuple[np.ndarray, float]:
+        """One continuous-batching iteration across ALL slots (inactive slots
+        compute in lockstep but are masked out). Returns (sampled (n_slots,),
+        measured_s)."""
+        t0 = time.perf_counter()
+        lens = self.kv.kv_lens()
+        logits, updates = self._decode(
+            self.params, jnp.asarray(next_tokens), self.kv.caches,
+            self.kv.positions(), lens)
+        logits = jax.block_until_ready(logits)
+        self.kv.append_step(updates, emit_mask)
+        dt = time.perf_counter() - t0
+        self.compute_s += dt
+        self.n_decode_tokens += int(emit_mask.sum())
+        return self.sample(logits), dt

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: flash-decode GQA attention — the memory-bound tail
+phase ConServe pins to decoders. One query token per sequence reads a long
+KV cache; the kernel streams KV blocks HBM->VMEM with online-softmax
+accumulation, so HBM KV bandwidth is the only roofline term (matching §3.2's
+characterization). GQA is handled by blocking over KV heads: the G query
+heads sharing a KV head ride in one (G, D) tile against each (block_k, D)
+KV tile — an MXU-shaped matmul even at decode."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, block_k: int, scale: float):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    b = pl.program_id(0)
+    valid_len = len_ref[b]
+    k_start = ki * block_k
+
+    @pl.when(k_start < valid_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (block_k, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < valid_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-20)).astype(o_ref.dtype)
+
+
+def flash_decode_attention(q, k, v, lengths=None, *, block_k: int = 256,
+                           interpret: bool = True):
+    """q: (B, H, D); k,v: (B, S, Hkv, D); lengths: (B,) valid KV lengths
+    (None = all S valid). Returns (B, H, D)."""
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    block_k = min(block_k, S)
+    assert S % block_k == 0, "pad cache length to a block multiple"
+    nk = S // block_k
+    scale = 1.0 / math.sqrt(D)
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    qg = q.reshape(B, Hkv, G, D)
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # lengths
+            pl.BlockSpec((1, 1, G, D), lambda b, n, ki: (b, n, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, n, ki: (b, ki, n, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, n, ki: (b, ki, n, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, n, ki: (b, n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qg, k, v)
+    return out.reshape(B, H, D)

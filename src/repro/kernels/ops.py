@@ -1,0 +1,58 @@
+"""Jit'd public wrappers around the Pallas kernels with backend dispatch:
+on TPU the compiled kernels run natively (interpret=False); elsewhere they
+execute in interpret mode (for validation) or fall back to the jnp
+reference path (`impl="xla"`). The model substrate uses the XLA path for
+the multi-device dry-run (Pallas inside GSPMD is a per-backend concern);
+kernels are selectable via `attention_impl` for single-replica serving."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import flash_decode_attention
+from .prefill_attention import flash_prefill_attention
+from .rglru_kernel import rglru_pallas
+from .rwkv6_kernel import wkv6_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("window", "impl"))
+def prefill_attention(q, k, v, *, window: int = 0, impl: str = "pallas"):
+    """q,k,v: (B, S, H, D) — causal (optionally sliding-window) attention."""
+    if impl == "xla":
+        return ref.causal_attention_ref(q, k, v, window=window)
+    out = flash_prefill_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), window=window, interpret=not _on_tpu())
+    return out.transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def decode_attention(q, k, v, lengths=None, *, impl: str = "pallas"):
+    """q: (B,H,D); k,v: (B,S,Hkv,D); lengths: (B,). Flash-decode GQA."""
+    if impl == "xla":
+        return ref.decode_attention_ref(q, k, v, lengths)
+    return flash_decode_attention(q, k, v, lengths, interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("impl", "chunk"))
+def wkv6(r, k, v, logw, u, state, *, chunk: int = 32, impl: str = "pallas"):
+    """Chunk-parallel WKV6. Returns (y, final_state), both fp32."""
+    if impl == "xla":
+        return ref.wkv6_ref(r, k, v, logw, u, state)
+    return wkv6_pallas(r, k, v, logw, u, state, chunk=chunk,
+                       interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("impl", "chunk"))
+def rglru_scan(log_a, b, h0, *, chunk: int = 128, impl: str = "pallas"):
+    """Gated linear recurrence h_t = exp(log_a_t) h_{t-1} + b_t."""
+    if impl == "xla":
+        return ref.rglru_ref(log_a, b, h0)
+    return rglru_pallas(log_a, b, h0, chunk=chunk, interpret=not _on_tpu())

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: causal flash attention for the compute-bound prefill
+phase (the paper's turn-1 work).
+
+Canonical TPU flash layout: grid (B, H, nQ, nK) with the KV-block axis
+minor-most (sequential on TPU), online-softmax statistics carried in VMEM
+scratch across KV blocks, MXU-shaped (block_q × head_dim) tiles. Causal
+blocks above the diagonal are skipped via pl.when (no wasted MXU issue —
+unlike the masked-jnp fallback, this kernel does NOT pay the 2× causal
+overhead; see EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, window: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # skip blocks fully above the causal diagonal / outside the window
+    in_range = k_start <= q_start + block_q - 1
+    if window:
+        in_range &= (k_start + block_k - 1) > (q_start - window)
+
+    @pl.when(in_range)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (block_q, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (block_k, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-20)).astype(o_ref.dtype)
+
+
+def flash_prefill_attention(q, k, v, *, window: int = 0, block_q: int = 128,
+                            block_k: int = 128, interpret: bool = True):
+    """q,k,v: (B, H, S, D) — same head count (GQA expanded by caller).
+    Causal (optionally sliding-window) attention. Returns (B, H, S, D)."""
+    B, H, S, D = q.shape
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, "pad S to block multiples"
+    nq, nk = S // block_q, S // block_k
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_flash_kernel, block_q=block_q,
+                               block_k=block_k, window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            # m, l: (block_q, 1); acc: (block_q, D) — fp32 online stats in VMEM
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

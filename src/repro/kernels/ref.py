@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel. Deliberately naive (materialized
+scores, step-by-step recurrences) and written independently of the model
+code so kernel sweeps test against a second implementation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q, k, v, *, window: int = 0):
+    """q,k,v: (B, S, H, D) (same head count — GQA expanded by caller).
+    Full materialized causal softmax attention."""
+    B, S, H, D = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(D))
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = j <= i
+    if window:
+        mask &= j > i - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths=None):
+    """q: (B, H, D); k,v: (B, S, Hkv, D); lengths: (B,) valid KV lengths.
+    One-token GQA attention."""
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bngd,bsnd->bngs", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(D))
+    if lengths is not None:
+        mask = jnp.arange(S)[None, None, None, :] < lengths[:, None, None, None]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngs,bsnd->bngd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, logw, u, state):
+    """Step-by-step WKV6 recurrence (the slow oracle).
+    r,k,v: (B,S,H,hs); logw: (B,S,H,hs) (<0); u: (H,hs);
+    state: (B,H,hs,hs) [key, value] layout. Returns (y, final_state)."""
+    B, S, H, hs = r.shape
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def step(s_, t):
+        rt, kt, vt, wt = rf[:, t], kf[:, t], vf[:, t], logw[:, t]
+        a = jnp.einsum("bhi,bhv->bhiv", kt, vt)  # outer product
+        y = (jnp.einsum("bhi,bhiv->bhv", rt, s_)
+             + jnp.einsum("bhi,bhi->bh", rt, u[None] * kt)[..., None] * vt)
+        s_new = jnp.exp(wt)[..., None] * s_ + a
+        return s_new, y
+
+    final, ys = jax.lax.scan(step, state.astype(jnp.float32),
+                             jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3), final
+
+
+def rglru_ref(log_a, b, h0):
+    """Step-by-step gated linear recurrence: h_t = exp(log_a_t)*h_{t-1}+b_t.
+    log_a, b: (B, S, W); h0: (B, W). Returns (h_all (B,S,W), h_final)."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    bf = b.astype(jnp.float32)
+
+    def step(h, t):
+        h = a[:, t] * h + bf[:, t]
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(b.shape[1]))
+    return hs.transpose(1, 0, 2), hT

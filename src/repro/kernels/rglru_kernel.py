@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: RG-LRU gated linear recurrence (RecurrentGemma).
+
+Diagonal recurrence h_t = a_t*h_{t-1} + b_t is pure VPU work. The TPU
+layout: grid (B, nW, nC) — channel blocks ride the lane dimension, the
+chunk axis is minor-most/sequential with the carried state in VMEM scratch,
+and each chunk runs a short fori_loop over its timesteps (VPU elementwise;
+no MXU needed — this layer is bandwidth-bound by construction, which is why
+the paper's low-power tier absorbs it so well)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, hT_ref, h_scr, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[...]
+
+    a = a_ref[0].astype(jnp.float32)  # (chunk, Wb)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        y_ref[0, t] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[0])
+    h_scr[...] = h[None]
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        hT_ref[0] = h
+
+
+def rglru_pallas(log_a, b, h0, *, chunk: int = 128, block_w: int = 512,
+                 interpret: bool = True):
+    """log_a, b: (B, S, W); h0: (B, W) f32. h_t = exp(log_a_t) h_{t-1} + b_t.
+    Returns (h_all (B,S,W) f32, h_final (B,W) f32)."""
+    B, S, W = log_a.shape
+    chunk = min(chunk, S)
+    block_w = min(block_w, W)
+    assert S % chunk == 0 and W % block_w == 0
+    nc, nw = S // chunk, W // block_w
+    a = jnp.exp(log_a.astype(jnp.float32))
+
+    kernel = functools.partial(_rglru_kernel, chunk=chunk)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(B, nw, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_w), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((1, chunk, block_w), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((1, block_w), lambda bi, wi, ci: (bi, wi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_w), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((1, block_w), lambda bi, wi, ci: (bi, wi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        interpret=interpret,
+    )(a, b.astype(jnp.float32), h0.astype(jnp.float32))
+    return y, hT

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell against the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+print memory_analysis() and cost_analysis(), parse the post-SPMD HLO for
+collective traffic, and persist everything to JSON for §Dry-run / §Roofline.
+
+The XLA_FLAGS line above MUST run before any jax import (jax locks device
+count at first init); it is deliberately NOT set anywhere else — smoke tests
+and benchmarks see the single real CPU device.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--jobs-file cells.txt]
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "pred": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str):
+    """Sum result-buffer bytes of every collective op in post-SPMD HLO.
+    (operand size == result size for all-reduce / permute / all-to-all; for
+    all-gather this counts the full gathered buffer ~= wire traffic; see
+    benchmarks/roofline.py for the accounting note)."""
+    totals = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for op in _COLLECTIVES:
+            # match result op, not operands mentioned elsewhere
+            if f" {op}(" in line or f" {op}-start(" in line:
+                lhs = line.split(f" {op}", 1)[0]
+                for dtype, dims in _SHAPE_RE.findall(lhs):
+                    if dtype in _DTYPE_BYTES:
+                        totals[op] += _type_bytes(dtype, dims)
+                counts[op] += 1
+                break
+    return totals, counts
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, variant: str = "base",
+             out_dir: Path = ARTIFACT_DIR, cfg_overrides=None, **program_kw):
+    import jax  # noqa: deferred so XLA_FLAGS applies
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell, cell_supported
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}__{variant}"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{tag}.json"
+
+    ok, reason = cell_supported(arch, shape_name)
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "variant": variant, "supported": ok}
+    if not ok:
+        record["reason"] = reason
+        out_path.write_text(json.dumps(record, indent=2))
+        print(f"[dryrun] {tag}: {reason}")
+        return record
+
+    from repro.configs import get_config
+    from repro.launch.specs import probe_config
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    base_cfg = get_config(arch)
+    cfg_used = base_cfg.scaled(**cfg_overrides) if cfg_overrides else None
+    fn, args = build_cell(arch, shape_name, mesh, cfg=cfg_used, **program_kw)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(fn)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        print(mem)    # proves it fits
+        print({k: v for k, v in (cost or {}).items()
+               if k in ("flops", "bytes accessed", "utilization operand 0")})
+
+    hlo = compiled.as_text()
+    coll, coll_counts = parse_collectives(hlo)
+
+    # depth probes: XLA cost analysis counts while-loop bodies ONCE, so the
+    # layer scan's per-group cost is measured directly from 1-group vs
+    # 2-group reductions of the same cell and extrapolated in roofline.py.
+    cfg_full = cfg_used or get_config(arch)
+    _, n_groups, _ = cfg_full.pattern_groups()
+    probes = {"n_groups": n_groups,
+              "pattern_len": len(cfg_full.block_pattern)}
+    if n_groups > 1:
+        for k in (1, 2):
+            pcfg = probe_config(arch, k)
+            if cfg_overrides:
+                pcfg = pcfg.scaled(**cfg_overrides)
+            pfn, pargs = build_cell(arch, shape_name, mesh, cfg=pcfg,
+                                    **program_kw)
+            with mesh:
+                pcompiled = jax.jit(pfn).lower(*pargs).compile()
+                pcost = pcompiled.cost_analysis()
+            pcoll, _ = parse_collectives(pcompiled.as_text())
+            probes[f"g{k}"] = {
+                "flops": float((pcost or {}).get("flops", -1)),
+                "bytes_accessed": float((pcost or {}).get("bytes accessed", -1)),
+                "collective_total": sum(pcoll.values()),
+            }
+
+    def _mem_attr(name):
+        return getattr(mem, name, None) if mem is not None else None
+
+    n_devices = 512 if multi_pod else 256
+    record.update({
+        "n_devices": n_devices,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": float((cost or {}).get("flops", -1)),
+        "bytes_accessed": float((cost or {}).get("bytes accessed", -1)),
+        "memory": {
+            "argument_bytes": _mem_attr("argument_size_in_bytes"),
+            "output_bytes": _mem_attr("output_size_in_bytes"),
+            "temp_bytes": _mem_attr("temp_size_in_bytes"),
+            "generated_code_bytes": _mem_attr("generated_code_size_in_bytes"),
+        },
+        "collective_bytes": coll,
+        "collective_counts": coll_counts,
+        "collective_total": sum(coll.values()),
+        "hlo_lines": len(hlo.splitlines()),
+        "probes": probes,
+    })
+    out_path.write_text(json.dumps(record, indent=2))
+    print(f"[dryrun] {tag}: flops={record['flops']:.3e} "
+          f"coll={record['collective_total']:.3e}B "
+          f"compile={t_compile:.1f}s")
+    return record
+
+
+def all_cells():
+    from repro.configs import ASSIGNED, SHAPES
+    return [(a, s) for a in ASSIGNED for s in SHAPES]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--in-process", action="store_true",
+                    help="run --all cells in this process (default: one "
+                         "subprocess per cell for isolation)")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--loss-chunk", type=int, default=0)
+    ap.add_argument("--flash-vjp", action="store_true",
+                    help="custom-VJP flash attention (train memory variant)")
+    ap.add_argument("--kv-dtype", default="",
+                    help="quantized KV cache dtype for decode cells (int8)")
+    ap.add_argument("--rwkv-pad-heads", type=int, default=0)
+    ap.add_argument("--remat-layer", action="store_true",
+                    help="per-layer remat granularity (train memory variant)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="FSDP/ZeRO-3 param sharding on the model axis "
+                         "(train variant; baseline is Megatron TP)")
+    args = ap.parse_args()
+
+    kw = {}
+    if args.grad_accum != 1:
+        kw["grad_accum"] = args.grad_accum
+    if args.compress_grads:
+        kw["compress_grads"] = True
+    if args.no_remat:
+        kw["remat"] = False
+    if args.loss_chunk:
+        kw["loss_chunk"] = args.loss_chunk
+    if args.fsdp:
+        kw["sharding_mode"] = "fsdp"
+    overrides = {}
+    if args.flash_vjp:
+        overrides["flash_vjp"] = True
+    if args.kv_dtype:
+        overrides["kv_cache_dtype"] = args.kv_dtype
+    if args.rwkv_pad_heads:
+        overrides["rwkv_pad_heads_to"] = args.rwkv_pad_heads
+    if args.remat_layer:
+        overrides["remat_granularity"] = "layer"
+    if overrides:
+        kw["cfg_overrides"] = overrides
+
+    if not args.all:
+        assert args.arch and args.shape, "--arch and --shape required"
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        for mp in meshes:
+            run_cell(args.arch, args.shape, mp, variant=args.variant, **kw)
+        return
+
+    cells = all_cells()
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    todo = []
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            tag = f"{arch}__{shape}__{mesh_name}__{args.variant}"
+            if not args.force and (ARTIFACT_DIR / f"{tag}.json").exists():
+                print(f"[dryrun] {tag}: cached, skip")
+                continue
+            todo.append((arch, shape, mp))
+
+    if args.in_process:
+        for arch, shape, mp in todo:
+            run_cell(arch, shape, mp, variant=args.variant, **kw)
+        return
+
+    for arch, shape, mp in todo:
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--variant", args.variant]
+        if mp:
+            cmd.append("--multi-pod")
+        if args.grad_accum != 1:
+            cmd += ["--grad-accum", str(args.grad_accum)]
+        if args.compress_grads:
+            cmd.append("--compress-grads")
+        if args.no_remat:
+            cmd.append("--no-remat")
+        if args.flash_vjp:
+            cmd.append("--flash-vjp")
+        if args.kv_dtype:
+            cmd += ["--kv-dtype", args.kv_dtype]
+        if args.rwkv_pad_heads:
+            cmd += ["--rwkv-pad-heads", str(args.rwkv_pad_heads)]
+        if args.loss_chunk:
+            cmd += ["--loss-chunk", str(args.loss_chunk)]
+        print("[dryrun] spawn:", " ".join(cmd), flush=True)
+        r = subprocess.run(cmd)
+        if r.returncode != 0:
+            print(f"[dryrun] FAILED: {arch} {shape} multi_pod={mp}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Production mesh construction. A FUNCTION (not a module-level constant) so
+importing this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke/engine runs (axis names preserved so
+    the same pjit code paths run everywhere)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

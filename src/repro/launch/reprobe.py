@@ -1,0 +1,64 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Refresh the depth-probe measurements inside existing dry-run artifacts
+(after probe methodology changes) WITHOUT recompiling the main cells.
+
+  python -m repro.launch.reprobe [--mesh 16x16] [--variant base]
+"""
+import argparse
+import json
+from pathlib import Path
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--only-arch", default=None)
+    args = ap.parse_args()
+
+    import jax
+    from repro.launch.dryrun import parse_collectives
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell, probe_config
+    from repro.configs import get_config
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "2x16x16"))
+    for f in sorted(ARTIFACT_DIR.glob(f"*__{args.mesh}__{args.variant}.json")):
+        rec = json.loads(f.read_text())
+        if not rec.get("supported"):
+            continue
+        arch, shape = rec["arch"], rec["shape"]
+        if args.only_arch and arch != args.only_arch:
+            continue
+        cfg_full = get_config(arch)
+        _, n_groups, _ = cfg_full.pattern_groups()
+        probes = {"n_groups": n_groups,
+                  "pattern_len": len(cfg_full.block_pattern),
+                  "method": "unrolled+block_full"}
+        if n_groups > 1:
+            for k in (1, 2):
+                pcfg = probe_config(arch, k)
+                pfn, pargs = build_cell(arch, shape, mesh, cfg=pcfg)
+                with mesh:
+                    pc = jax.jit(pfn).lower(*pargs).compile()
+                    cost = pc.cost_analysis()
+                coll, _ = parse_collectives(pc.as_text())
+                probes[f"g{k}"] = {
+                    "flops": float((cost or {}).get("flops", -1)),
+                    "bytes_accessed": float((cost or {}).get(
+                        "bytes accessed", -1)),
+                    "collective_total": sum(coll.values()),
+                }
+        rec["probes"] = probes
+        f.write_text(json.dumps(rec, indent=2))
+        g = probes.get("g2", {}).get("flops", 0) - probes.get(
+            "g1", {}).get("flops", 0)
+        print(f"[reprobe] {arch} {shape}: per-group flops {g:.3e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no device
+allocation) for every model input of every (architecture × shape) cell, plus
+the program builders the dry-run lowers.
+
+Programs per shape kind:
+  train_*    -> train_step(params, opt_state, batch)
+  prefill_*  -> prefill_step(params, tokens[, frontend_embeds])
+  decode_* / long_* -> serve_step(params, token, caches, position)
+                       (one new token against a KV cache of seq_len)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.models.sharding import (cache_pspecs, data_pspec, mesh_axes,
+                                   param_pspecs)
+from repro.train.optimizer import AdamWConfig, adamw_state_skeleton
+from repro.train.train_step import make_train_step
+
+
+def cell_supported(arch: str, shape_name: str) -> Tuple[bool, str]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skipped: pure full-attention architecture; long_500k "
+                       "requires sub-quadratic attention (DESIGN.md §4)")
+    if shape.seq_len > cfg.max_seq:
+        return False, f"skipped: seq_len {shape.seq_len} > max_seq {cfg.max_seq}"
+    return True, "ok"
+
+
+def _named(mesh: Mesh, sds_tree, pspec_tree):
+    return jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(
+            l.shape, l.dtype, sharding=NamedSharding(mesh, s)),
+        sds_tree, pspec_tree)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
+                with_labels: bool) -> Dict[str, Any]:
+    dp, _ = mesh_axes(mesh)
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32,
+                               sharding=NamedSharding(mesh, data_pspec(dp, 2)))
+    out = {"tokens": tok}
+    if with_labels:
+        out["labels"] = tok
+    if cfg.frontend != "none":
+        fl = cfg.frontend_len or cfg.encoder_seq
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (batch, fl, cfg.d_model), cfg.jnp_dtype,
+            sharding=NamedSharding(mesh, data_pspec(dp, 3)))
+    return out
+
+
+def sharded_params(cfg: ModelConfig, mesh: Mesh, model=None,
+                   sharding_mode: str = "tp"):
+    model = model or build_model(cfg)
+    sk = model.skeleton()
+    return _named(mesh, sk, param_pspecs(cfg, sk, mode=sharding_mode))
+
+
+def sharded_caches(cfg: ModelConfig, mesh: Mesh, batch: int, ctx: int,
+                   model=None):
+    model = model or build_model(cfg)
+    ck = model.cache_skeleton(batch, ctx)
+    dp, _ = mesh_axes(mesh)
+    # batch=1 long-context cells: put every data axis on the KV length dim
+    # (whole-mesh context parallelism) instead of a size-1 batch dim.
+    if batch == 1:
+        specs = jax.tree_util.tree_map_with_path(
+            lambda p, l: _long_ctx_spec(p, l, dp), ck)
+    else:
+        specs = cache_pspecs(cfg, ck, dp)
+    return _named(mesh, ck, specs)
+
+
+def _long_ctx_spec(path, leaf, dp):
+    names = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+    name = names[-1]
+    grouped = leaf.ndim >= 4 and names[0] in ("groups", "self", "cross")
+    lead = (None,) if grouped else ()
+    rank = len(leaf.shape)
+    if name in ("k", "v", "ckv", "krope"):
+        ln_axis = (*dp, "model")
+        tail = (None, ln_axis) + (None,) * (rank - len(lead) - 2)
+        return P(*lead, *tail)
+    return P(*lead, *((None,) * (rank - len(lead))))
+
+
+# --------------------------------------------------------------------------- #
+# Program builders
+# --------------------------------------------------------------------------- #
+def build_train_program(arch: str, mesh: Mesh, *, grad_accum: int = 1,
+                        compress_grads: bool = False, remat: bool = True,
+                        loss_chunk: int = 512, sharding_mode: str = "tp",
+                        cfg=None):
+    cfg = cfg or get_config(arch)
+    model = build_model(cfg)
+    shape = get_shape("train_4k")
+    opt_cfg = AdamWConfig()
+    step_fn = make_train_step(model, opt_cfg, remat=remat,
+                              grad_accum=grad_accum,
+                              compress_grads=compress_grads,
+                              loss_chunk=loss_chunk)
+    params = sharded_params(cfg, mesh, model, sharding_mode=sharding_mode)
+    opt = adamw_state_skeleton(model.skeleton())
+    opt_specs = {
+        "mu": param_pspecs(cfg, model.skeleton(), mode=sharding_mode),
+        "nu": param_pspecs(cfg, model.skeleton(), mode=sharding_mode),
+        "step": P(),
+    }
+    opt = _named(mesh, opt, opt_specs)
+    batch = batch_specs(cfg, mesh, shape.global_batch, shape.seq_len, True)
+    return step_fn, (params, opt, batch)
+
+
+def build_prefill_program(arch: str, mesh: Mesh, shape_name: str = "prefill_32k",
+                          cfg=None):
+    cfg = cfg or get_config(arch)
+    model = build_model(cfg)
+    shape = get_shape(shape_name)
+
+    if cfg.frontend != "none":
+        def prefill_step(params, tokens, frontend_embeds):
+            return model.prefill(params, tokens,
+                                 frontend_embeds=frontend_embeds)
+        batch = batch_specs(cfg, mesh, shape.global_batch, shape.seq_len, False)
+        args = (sharded_params(cfg, mesh, model), batch["tokens"],
+                batch["frontend_embeds"])
+    else:
+        def prefill_step(params, tokens):
+            return model.prefill(params, tokens)
+        batch = batch_specs(cfg, mesh, shape.global_batch, shape.seq_len, False)
+        args = (sharded_params(cfg, mesh, model), batch["tokens"])
+    return prefill_step, args
+
+
+def build_decode_program(arch: str, mesh: Mesh, shape_name: str, cfg=None):
+    cfg = cfg or get_config(arch)
+    model = build_model(cfg)
+    shape = get_shape(shape_name)
+    dp, _ = mesh_axes(mesh)
+    B, ctx = shape.global_batch, shape.seq_len
+
+    def serve_step(params, token, caches, position):
+        return model.decode_step(params, token, caches, position)
+
+    tok_spec = P(dp if len(dp) > 1 else dp[0]) if B > 1 else P()
+    token = jax.ShapeDtypeStruct((B,), jnp.int32,
+                                 sharding=NamedSharding(mesh, tok_spec))
+    position = jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=NamedSharding(mesh, P()))
+    args = (sharded_params(cfg, mesh, model), token,
+            sharded_caches(cfg, mesh, B, ctx, model), position)
+    return serve_step, args
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, cfg=None, **kw):
+    kind = get_shape(shape_name).kind
+    if kind == "train":
+        return build_train_program(arch, mesh, cfg=cfg, **kw)
+    if kind == "prefill":
+        return build_prefill_program(arch, mesh, shape_name, cfg=cfg)
+    return build_decode_program(arch, mesh, shape_name, cfg=cfg)
+
+
+def probe_config(arch: str, k: int):
+    """Depth probe: k pattern repetitions (k groups), used to measure
+    per-layer-group FLOPs/bytes/collectives — XLA's cost analysis counts
+    loop bodies once, so dryrun extrapolates X + (G-1)·(X_g2 - X_g1)."""
+    cfg = get_config(arch)
+    n = len(cfg.block_pattern) * k
+    kw = {"n_layers": n, "unroll_layers": True, "attn_block_full": True,
+          "flash_vjp": False}
+    if cfg.is_encoder_decoder:
+        kw["n_encoder_layers"] = n
+    return cfg.scaled(**kw)

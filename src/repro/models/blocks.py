@@ -1,0 +1,147 @@
+"""Per-layer blocks: (norm -> sequence mixer -> residual) + (norm -> FFN ->
+residual), specialized by layer kind. One function pair (skeleton/apply) keyed
+by kind keeps the grouped layer-scan in transformer.py homogeneous."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from .attention import (attn_skeleton, gqa_decode, gqa_prefill, mla_decode,
+                        mla_prefill)
+from .config import (ATTN_GLOBAL, ATTN_LOCAL, ATTN_MLA, RGLRU, RWKV6,
+                     ModelConfig)
+from .layers import apply_mlp, apply_norm, mlp_skeleton, norm_skeleton, sds
+from .moe import apply_moe, moe_skeleton
+from .recurrent import (rglru_decode, rglru_init_state, rglru_prefill,
+                        rglru_skeleton, rwkv6_decode, rwkv6_init_state,
+                        rwkv6_prefill, rwkv6_skeleton, rwkv_cmix,
+                        rwkv_cmix_skeleton)
+
+ATTN_KINDS = (ATTN_GLOBAL, ATTN_LOCAL, ATTN_MLA)
+
+
+def block_skeleton(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    sk: Dict[str, Any] = {"ln1": norm_skeleton(cfg), "ln2": norm_skeleton(cfg)}
+    if kind in ATTN_KINDS:
+        sk["attn"] = attn_skeleton(cfg, kind)
+    elif kind == RWKV6:
+        sk["tmix"] = rwkv6_skeleton(cfg)
+    elif kind == RGLRU:
+        sk["rglru"] = rglru_skeleton(cfg)
+    else:
+        raise ValueError(kind)
+    if kind == RWKV6:
+        sk["cmix"] = rwkv_cmix_skeleton(cfg)
+    elif cfg.n_experts:
+        sk["moe"] = moe_skeleton(cfg)
+    else:
+        sk["mlp"] = mlp_skeleton(cfg)
+    return sk
+
+
+def block_cache_skeleton(cfg: ModelConfig, kind: str, batch: int,
+                         ctx: int) -> Dict[str, Any]:
+    """Shape skeleton of the decode-time cache one layer of `kind` holds after
+    `ctx` tokens. Attention caches grow; recurrent states are fixed-size."""
+    hd = cfg.head_dim
+    cdt = cfg.kv_cache_dtype or cfg.dtype
+    if kind == ATTN_GLOBAL:
+        return {"k": sds((batch, ctx, cfg.n_kv_heads, hd), cdt),
+                "v": sds((batch, ctx, cfg.n_kv_heads, hd), cdt)}
+    if kind == ATTN_LOCAL:
+        w = min(ctx, cfg.window) if cfg.window else ctx
+        return {"k": sds((batch, w, cfg.n_kv_heads, hd), cdt),
+                "v": sds((batch, w, cfg.n_kv_heads, hd), cdt)}
+    if kind == ATTN_MLA:
+        return {"ckv": sds((batch, ctx, cfg.kv_lora_rank), cdt),
+                "krope": sds((batch, ctx, cfg.qk_rope_dim), cdt)}
+    if kind == RWKV6:
+        hs = cfg.rwkv_head_size
+        nh_pad = cfg.rwkv_pad_heads_to or (cfg.d_model // hs)
+        return {"s": sds((batch, nh_pad, hs, hs), "float32"),
+                "shift": sds((batch, 1, cfg.d_model), cfg.dtype),
+                "cshift": sds((batch, 1, cfg.d_model), cfg.dtype)}
+    if kind == RGLRU:
+        return {"h": sds((batch, cfg.lru_width), "float32"),
+                "conv": sds((batch, cfg.conv1d_width - 1, cfg.lru_width),
+                            cfg.dtype)}
+    raise ValueError(kind)
+
+
+GROWING_KEYS = ("k", "v", "ckv", "krope")
+
+
+def is_growing(kind: str) -> bool:
+    return kind in ATTN_KINDS
+
+
+def _ffn(params, cfg: ModelConfig, kind: str, x, cache, updates):
+    if kind == RWKV6:
+        prev = cache["cshift"] if cache is not None else jnp.zeros(
+            (x.shape[0], 1, x.shape[-1]), x.dtype)
+        out, cshift = rwkv_cmix(params["cmix"], cfg, x, prev)
+        updates["cshift"] = cshift
+        return out
+    if cfg.n_experts:
+        return apply_moe(params["moe"], cfg, x)
+    return apply_mlp(params["mlp"], cfg, x)
+
+
+def block_prefill(params, cfg: ModelConfig, kind: str, x, start_pos,
+                  cache: Optional[Dict] = None, kv_lens=None,
+                  prefix_start=None) -> Tuple[jnp.ndarray, Dict]:
+    """cache: prefix KV (append-prefill) or recurrent state; None = fresh.
+    Returns (x_out, cache_out): new-token KV entries for attention kinds,
+    updated state for recurrent kinds (plus cmix shift under 'cshift')."""
+    h = apply_norm(params["ln1"], cfg, x)
+    updates: Dict[str, Any] = {}
+    if kind == ATTN_MLA:
+        out, cache_out = mla_prefill(params["attn"], cfg, h, start_pos,
+                                     prefix_kv=cache, kv_lens=kv_lens,
+                                     prefix_start=prefix_start)
+    elif kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        out, cache_out = gqa_prefill(params["attn"], cfg, kind, h, start_pos,
+                                     prefix_kv=cache, kv_lens=kv_lens,
+                                     prefix_start=prefix_start)
+    elif kind == RWKV6:
+        state = cache or rwkv6_init_state(cfg, x.shape[0])
+        out, cache_out = rwkv6_prefill(params["tmix"], cfg, h,
+                                       {"s": state["s"], "shift": state["shift"]})
+    elif kind == RGLRU:
+        state = cache or rglru_init_state(cfg, x.shape[0])
+        out, cache_out = rglru_prefill(params["rglru"], cfg, h, state)
+    else:
+        raise ValueError(kind)
+    x = x + out
+    h2 = apply_norm(params["ln2"], cfg, x)
+    x = x + _ffn(params, cfg, kind, h2, cache, updates)
+    cache_out = {**cache_out, **updates}
+    return x, cache_out
+
+
+def block_decode(params, cfg: ModelConfig, kind: str, x1, position,
+                 cache: Dict, kv_lens=None) -> Tuple[jnp.ndarray, Dict]:
+    """x1: (B,1,D). Returns (x_out, cache_updates): for attention kinds the
+    new token's KV entries (engine appends); for recurrent kinds the updated
+    state."""
+    h = apply_norm(params["ln1"], cfg, x1)
+    updates: Dict[str, Any] = {}
+    if kind == ATTN_MLA:
+        out, cache_out = mla_decode(params["attn"], cfg, h, position, cache,
+                                    kv_lens=kv_lens)
+    elif kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        out, cache_out = gqa_decode(params["attn"], cfg, kind, h, position,
+                                    cache, kv_lens=kv_lens)
+    elif kind == RWKV6:
+        out, cache_out = rwkv6_decode(params["tmix"], cfg, h,
+                                      {"s": cache["s"], "shift": cache["shift"]})
+    elif kind == RGLRU:
+        out, cache_out = rglru_decode(params["rglru"], cfg, h, cache)
+    else:
+        raise ValueError(kind)
+    x1 = x1 + out
+    h2 = apply_norm(params["ln2"], cfg, x1)
+    x1 = x1 + _ffn(params, cfg, kind, h2, cache, updates)
+    cache_out = {**cache_out, **updates}
+    return x1, cache_out

@@ -1,0 +1,197 @@
+"""Encoder-decoder model (Whisper backbone). The audio conv frontend is a
+STUB per the assignment: `input_specs()` supplies precomputed frame
+embeddings (B, F, d_model); the encoder is a bidirectional transformer over
+them. Decoder layers add cross-attention whose K/V are computed once at
+prefill (the "turn-1 compute-bound phase" for this family) and cached as
+fixed entries."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attn_skeleton, cross_attention, cross_attn_skeleton,
+                        encode_cross_kv, gqa_decode, gqa_prefill,
+                        online_attention)
+from .config import ATTN_GLOBAL, ModelConfig
+from .layers import (apply_mlp, apply_norm, embed, embed_skeleton,
+                     mlp_skeleton, norm_skeleton, sds, sinusoidal_positions,
+                     unembed, unembed_skeleton)
+from .transformer import _stack_skeleton
+
+
+def _scan_blocks(cfg, body, init, xs_tree):
+    """lax.scan over stacked layer params, or a Python unroll in measurement
+    mode (cfg.unroll_layers — XLA cost analysis counts loop bodies once; see
+    benchmarks/roofline.py)."""
+    if not cfg.unroll_layers:
+        return jax.lax.scan(body, init, xs_tree)
+    n = jax.tree_util.tree_leaves(xs_tree)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        xi = jax.tree_util.tree_map(lambda l: l[i], xs_tree)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _enc_block_skeleton(cfg: ModelConfig):
+    return {"ln1": norm_skeleton(cfg), "attn": attn_skeleton(cfg, ATTN_GLOBAL),
+            "ln2": norm_skeleton(cfg), "mlp": mlp_skeleton(cfg)}
+
+
+def _dec_block_skeleton(cfg: ModelConfig):
+    return {"ln1": norm_skeleton(cfg), "attn": attn_skeleton(cfg, ATTN_GLOBAL),
+            "lnx": norm_skeleton(cfg), "cross": cross_attn_skeleton(cfg),
+            "ln2": norm_skeleton(cfg), "mlp": mlp_skeleton(cfg)}
+
+
+def encdec_skeleton(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "embed": embed_skeleton(cfg),
+        "encoder": _stack_skeleton(_enc_block_skeleton(cfg), cfg.n_encoder_layers),
+        "enc_norm": norm_skeleton(cfg),
+        "decoder": _stack_skeleton(_dec_block_skeleton(cfg), cfg.n_layers),
+        "final_norm": norm_skeleton(cfg),
+        "unembed": unembed_skeleton(cfg),
+    }
+
+
+def encdec_cache_skeleton(cfg: ModelConfig, batch: int, ctx: int):
+    hd = cfg.head_dim
+    L = cfg.n_layers
+    return {
+        "self": {"k": sds((L, batch, ctx, cfg.n_kv_heads, hd), cfg.dtype),
+                 "v": sds((L, batch, ctx, cfg.n_kv_heads, hd), cfg.dtype)},
+        "cross": {"k": sds((L, batch, cfg.encoder_seq, cfg.n_kv_heads, hd),
+                           cfg.dtype),
+                  "v": sds((L, batch, cfg.encoder_seq, cfg.n_kv_heads, hd),
+                           cfg.dtype)},
+    }
+
+
+def run_encoder(params, cfg: ModelConfig, frame_embeds):
+    """frame_embeds: (B, F, D) from the stub frontend."""
+    B, F, D = frame_embeds.shape
+    h = frame_embeds.astype(cfg.jnp_dtype) + sinusoidal_positions(
+        F, D, cfg.jnp_dtype)[None]
+    pos = jnp.arange(F)
+
+    def block(hc, p):
+        a = apply_norm(p["ln1"], cfg, hc)
+        B_, F_, _ = a.shape
+        hd = cfg.head_dim
+        q = (a @ p["attn"]["wq"]).reshape(B_, F_, cfg.n_heads, hd)
+        k = (a @ p["attn"]["wk"]).reshape(B_, F_, cfg.n_kv_heads, hd)
+        v = (a @ p["attn"]["wv"]).reshape(B_, F_, cfg.n_kv_heads, hd)
+        reps = cfg.n_heads // cfg.n_kv_heads
+        if reps > 1:
+            k, v = jnp.repeat(k, reps, 2), jnp.repeat(v, reps, 2)
+        o = online_attention(q, k, v, pos, pos, causal=False)
+        hc = hc + o.reshape(B_, F_, -1) @ p["attn"]["wo"]
+        m = apply_norm(p["ln2"], cfg, hc)
+        return hc + apply_mlp(p["mlp"], cfg, m), None
+
+    h, _ = _scan_blocks(cfg, block, h, params["encoder"])
+    return apply_norm(params["enc_norm"], cfg, h)
+
+
+def encdec_prefill(params, cfg: ModelConfig, tokens, *, frontend_embeds,
+                   caches: Optional[Dict] = None, start_pos: int = 0,
+                   kv_lens=None):
+    """Turn-1 prefill runs the encoder + computes per-layer cross K/V; later
+    (append) prefills reuse the cached cross K/V (caches is not None)."""
+    B, S = tokens.shape
+    h = embed(params["embed"], cfg, tokens).astype(cfg.jnp_dtype)
+    h = h + sinusoidal_positions(S + start_pos, cfg.d_model,
+                                 cfg.jnp_dtype)[None, start_pos:]
+
+    if caches is None:
+        enc_out = run_encoder(params, cfg, frontend_embeds)
+
+        def cross_kv(_, p):
+            kv = encode_cross_kv(p["cross"], cfg, enc_out)
+            return None, kv
+
+        _, cross = _scan_blocks(cfg, cross_kv, None, params["decoder"])
+    else:
+        cross = caches["cross"]
+
+    def block(hc, xs):
+        p, xkv, prefix = xs
+        a = apply_norm(p["ln1"], cfg, hc)
+        out, newkv = gqa_prefill(p["attn"], cfg, ATTN_GLOBAL, a, start_pos,
+                                 prefix_kv=prefix, kv_lens=kv_lens)
+        hc = hc + out
+        c = apply_norm(p["lnx"], cfg, hc)
+        hc = hc + cross_attention(p["cross"], cfg, c, xkv)
+        m = apply_norm(p["ln2"], cfg, hc)
+        return hc + apply_mlp(p["mlp"], cfg, m), newkv
+
+    prefix = None if caches is None else caches["self"]
+    if prefix is None:
+        h, self_kv = _scan_blocks(cfg, lambda hc, xs: block(hc, (*xs, None)),
+                                  h, (params["decoder"], cross))
+    else:
+        h, self_kv = _scan_blocks(cfg, block, h,
+                                  (params["decoder"], cross, prefix))
+    h = apply_norm(params["final_norm"], cfg, h)
+    logits = unembed(params.get("unembed", {}), params["embed"], cfg, h[:, -1])
+    return logits, {"self": self_kv, "cross": cross}
+
+
+def encdec_hidden(params, cfg: ModelConfig, tokens, *, frontend_embeds,
+                  remat: bool = False, **_):
+    """Training forward: full hidden states (B,S,D) post final norm."""
+    B, S = tokens.shape
+    h = embed(params["embed"], cfg, tokens).astype(cfg.jnp_dtype)
+    h = h + sinusoidal_positions(S, cfg.d_model, cfg.jnp_dtype)[None]
+    enc_out = run_encoder(params, cfg, frontend_embeds)
+
+    def block(hc, p):
+        a = apply_norm(p["ln1"], cfg, hc)
+        out, _ = gqa_prefill(p["attn"], cfg, ATTN_GLOBAL, a, 0)
+        hc = hc + out
+        c = apply_norm(p["lnx"], cfg, hc)
+        xkv = encode_cross_kv(p["cross"], cfg, enc_out)
+        hc = hc + cross_attention(p["cross"], cfg, c, xkv)
+        m = apply_norm(p["ln2"], cfg, hc)
+        return hc + apply_mlp(p["mlp"], cfg, m), None
+
+    body = jax.checkpoint(block) if remat else block
+    h, _ = _scan_blocks(cfg, body, h, params["decoder"])
+    return apply_norm(params["final_norm"], cfg, h), {}
+
+
+def encdec_decode(params, cfg: ModelConfig, token, caches, position,
+                  kv_lens=None):
+    h = embed(params["embed"], cfg, token[:, None]).astype(cfg.jnp_dtype)
+    # sinusoidal position for the current step (scalar or per-sequence)
+    pos = jnp.asarray(position, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (token.shape[0],))
+    pos_table = sinusoidal_positions(cfg.max_seq, cfg.d_model, cfg.jnp_dtype)
+    h = h + pos_table[pos][:, None]
+
+    def block(hc, xs):
+        p, skv, xkv = xs
+        a = apply_norm(p["ln1"], cfg, hc)
+        out, newkv = gqa_decode(p["attn"], cfg, ATTN_GLOBAL, a, position, skv,
+                                kv_lens=kv_lens)
+        hc = hc + out
+        c = apply_norm(p["lnx"], cfg, hc)
+        hc = hc + cross_attention(p["cross"], cfg, c, xkv)
+        m = apply_norm(p["ln2"], cfg, hc)
+        return hc + apply_mlp(p["mlp"], cfg, m), newkv
+
+    h, new_self = _scan_blocks(cfg, block, h, (params["decoder"],
+                                               caches["self"],
+                                               caches["cross"]))
+    h = apply_norm(params["final_norm"], cfg, h)
+    logits = unembed(params.get("unembed", {}), params["embed"], cfg, h[:, 0])
+    return logits, {"self": new_self}

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts with grouped-capacity gather/scatter dispatch.
+
+TPU-native adaptation (DESIGN.md §5): instead of Switch-style dense dispatch
+einsums — whose one-hot contractions dominate HLO FLOPs — tokens are routed
+with integer gather/scatter inside fixed-size groups, and expert FFNs run as
+one batched matmul over an (E, G·C, D) buffer. Experts shard over the
+"model" mesh axis (expert parallelism); the only routing overhead is the
+capacity padding (capacity_factor − 1) plus empty slots.
+
+Tokens overflowing an expert's per-group capacity are dropped (standard
+capacity-based MoE semantics); the residual path preserves their activations.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import activation, apply_mlp, mlp_skeleton, sds
+
+
+def moe_skeleton(cfg: ModelConfig) -> Dict[str, Any]:
+    d, fe, e = cfg.d_model, cfg.d_expert, cfg.n_experts
+    sk = {
+        "router": sds((d, e), "float32"),
+        "wi": sds((e, d, fe), cfg.dtype),
+        "wo": sds((e, fe, d), cfg.dtype),
+    }
+    if cfg.gated_mlp:
+        sk["wg"] = sds((e, d, fe), cfg.dtype)
+    if cfg.n_shared_experts:
+        sk["shared"] = mlp_skeleton(cfg, d_ff=cfg.n_shared_experts * cfg.d_ff)
+    return sk
+
+
+def _group_tokens(x, group_size: int):
+    """(B,S,D) -> (G,n,D) with n == group_size (pads the token axis)."""
+    B, S, D = x.shape
+    N = B * S
+    flat = x.reshape(N, D)
+    pad = (-N) % group_size
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    G = (N + pad) // group_size
+    return flat.reshape(G, group_size, D), N, pad
+
+
+def apply_moe(params, cfg: ModelConfig, x, group_size: int = 1024):
+    """x: (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xg, N, pad = _group_tokens(x, min(group_size, B * S))
+    G, n, _ = xg.shape
+    cap = max(1, int(-(-n * K * cfg.capacity_factor // E)))
+
+    logits = (xg.astype(jnp.float32) @ params["router"])  # (G,n,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)  # (G,n,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert's per-group queue
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.int32)  # (G,n,K,E)
+    flat_oh = onehot.reshape(G, n * K, E)
+    pos_flat = jnp.cumsum(flat_oh, axis=1) - flat_oh  # exclusive cumsum
+    pos = (pos_flat.reshape(G, n, K, E) * onehot).sum(-1)  # (G,n,K)
+    keep = pos < cap  # overflow tokens dropped
+
+    # scatter token ids into (G, E, cap) slot table; empty slots -> n (pad row).
+    # Dropped (over-capacity) writes are routed out-of-bounds and discarded
+    # by mode="drop" so they can never clobber a live slot.
+    slot_e = jnp.where(keep, eidx, E)
+    slot_p = jnp.where(keep, pos, cap)
+    token_of = jnp.broadcast_to(jnp.arange(n)[None, :, None], (G, n, K))
+    table = jnp.full((G, E, cap), n, jnp.int32)  # n indexes a zero pad-token
+    g_ix = jnp.broadcast_to(jnp.arange(G)[:, None, None], (G, n, K))
+    table = table.at[g_ix, slot_e, slot_p].set(token_of, mode="drop")
+
+    xg_pad = jnp.concatenate([xg, jnp.zeros((G, 1, D), xg.dtype)], axis=1)
+    expert_in = xg_pad[g_ix_slots(G, E, cap), table]  # (G,E,cap,D)
+
+    # batched expert FFN: (E, G*cap, D) x (E, D, Fe)
+    ein = expert_in.transpose(1, 0, 2, 3).reshape(E, G * cap, D)
+    h = jnp.einsum("emd,edf->emf", ein, params["wi"])
+    if cfg.gated_mlp:
+        h = activation(cfg, jnp.einsum("emd,edf->emf", ein, params["wg"])) * h
+    else:
+        h = activation(cfg, h)
+    eout = jnp.einsum("emf,efd->emd", h, params["wo"])
+    eout = eout.reshape(E, G, cap, D).transpose(1, 0, 2, 3)  # (G,E,cap,D)
+
+    # gather back per (token, k) and combine with gate weights
+    back = eout[g_ix, slot_e, slot_p]  # (G,n,K,D)
+    back = back * (gate * keep).astype(back.dtype)[..., None]
+    yg = back.sum(2)  # (G,n,D)
+
+    y = yg.reshape(G * n, D)[:N].reshape(B, S, D)
+    if cfg.n_shared_experts:
+        y = y + apply_mlp(params["shared"], cfg, x)
+    return y
+
+
+def g_ix_slots(G, E, cap):
+    return jnp.broadcast_to(jnp.arange(G)[:, None, None], (G, E, cap))
+
+
+def moe_flops_per_token(cfg: ModelConfig) -> int:
+    """Active matmul FLOPs per token through the MoE block (for roofline)."""
+    mul = 3 if cfg.gated_mlp else 2
+    f = 2 * mul * cfg.d_model * cfg.d_expert * cfg.top_k * cfg.capacity_factor
+    f += 2 * cfg.d_model * cfg.n_experts  # router
+    if cfg.n_shared_experts:
+        f += 2 * mul * cfg.d_model * cfg.d_ff * cfg.n_shared_experts
+    return int(f)

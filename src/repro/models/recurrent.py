@@ -1,0 +1,270 @@
+"""Recurrent sequence mixers: RWKV6 ("Finch", data-dependent decay) and
+RG-LRU (RecurrentGemma / Griffin real-gated linear recurrent unit).
+
+Both expose a chunk-parallel prefill (compile-friendly: scan over chunks, not
+tokens; all decay exponents are differences along time so every exp() argument
+is <= 0 — numerically safe) and an O(1)-state decode step. These are the
+model-side reference implementations; `repro/kernels` holds the Pallas TPU
+versions validated against `kernels/ref.py`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import sds
+
+# --------------------------------------------------------------------------- #
+# RWKV6 time-mix
+# --------------------------------------------------------------------------- #
+def _rwkv_dims(cfg: ModelConfig):
+    """(n_heads_padded, attention width). rwkv_pad_heads_to pads the head
+    axis so it TP-shards without resharding collectives (§Perf)."""
+    hs = cfg.rwkv_head_size
+    nh = cfg.d_model // hs
+    nh_pad = max(cfg.rwkv_pad_heads_to, nh) if cfg.rwkv_pad_heads_to else nh
+    return nh, nh_pad, nh_pad * hs
+
+
+def rwkv6_skeleton(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh, nh_pad, da = _rwkv_dims(cfg)
+    lora = max(32, d // 32)
+    return {
+        # token-shift lerp coefficients per projection
+        "mu_r": sds((d,), cfg.dtype), "mu_k": sds((d,), cfg.dtype),
+        "mu_v": sds((d,), cfg.dtype), "mu_g": sds((d,), cfg.dtype),
+        "mu_w": sds((d,), cfg.dtype),
+        "wr": sds((d, da), cfg.dtype), "wk": sds((d, da), cfg.dtype),
+        "wv": sds((d, da), cfg.dtype), "wg": sds((d, da), cfg.dtype),
+        "wo": sds((da, d), cfg.dtype),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": sds((da,), "float32"),
+        "wA": sds((d, lora), cfg.dtype), "wB": sds((lora, da), cfg.dtype),
+        "bonus_u": sds((nh_pad, hs), "float32"),
+        "ln_y": sds((da,), cfg.dtype),  # group-norm scale on wkv output
+    }
+
+
+def _rwkv_mix(params, x, x_prev):
+    """Token shift: per-projection lerp between x_t and x_{t-1}.
+    x: (B,S,D); x_prev: (B,1,D) last token of previous segment."""
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+    def lerp(mu):
+        return x + (shifted - x) * jax.nn.sigmoid(mu.astype(jnp.float32)).astype(x.dtype)
+
+    return {k: lerp(params[f"mu_{k}"]) for k in ("r", "k", "v", "g", "w")}
+
+
+def _rwkv_rkvwg(params, cfg, x, x_prev):
+    B, S, D = x.shape
+    hs = cfg.rwkv_head_size
+    nh, nh_pad, _ = _rwkv_dims(cfg)
+    m = _rwkv_mix(params, x, x_prev)
+    r = (m["r"] @ params["wr"]).reshape(B, S, nh_pad, hs)
+    k = (m["k"] @ params["wk"]).reshape(B, S, nh_pad, hs)
+    v = (m["v"] @ params["wv"]).reshape(B, S, nh_pad, hs)
+    g = jax.nn.silu(m["g"] @ params["wg"])
+    logw = -jnp.exp(
+        params["w0"].astype(jnp.float32)
+        + (jnp.tanh(m["w"] @ params["wA"]) @ params["wB"]).astype(jnp.float32)
+    ).reshape(B, S, nh_pad, hs)  # log decay, strictly < 0
+    if nh_pad != nh:
+        # dead padded heads: zero r so they contribute nothing downstream
+        mask = (jnp.arange(nh_pad) < nh).astype(r.dtype)[None, None, :, None]
+        r = r * mask
+    return r, k, v, g, logw
+
+
+def wkv6_chunked(r, k, v, logw, u, state, chunk: int = 64):
+    """Chunk-parallel WKV6. r,k,v: (B,S,H,hs) fp-any; logw: (B,S,H,hs) fp32
+    (< 0); u: (H,hs); state: (B,H,hs,hs) fp32 (key-major, value-minor).
+    Returns (y (B,S,H,hs), final_state)."""
+    B, S, H, hs = r.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))  # pad decay=e^0? no:
+        # padded steps must not disturb state: set their k=0 (z did) and decay=1
+        # (logw=0) so S_t carries through; y on pads is discarded.
+    n = (S + pad) // c
+    rs = r.astype(jnp.float32).reshape(B, n, c, H, hs)
+    ks = k.astype(jnp.float32).reshape(B, n, c, H, hs)
+    vs = v.astype(jnp.float32).reshape(B, n, c, H, hs)
+    ws = logw.reshape(B, n, c, H, hs)
+
+    tri_lower = jnp.tril(jnp.ones((c, c), bool), k=-1)
+
+    def chunk_step(S0, inp):
+        rc, kc, vc, wc = inp  # (B,c,H,hs)
+        cum = jnp.cumsum(wc, axis=1)  # inclusive cumulative log-decay
+        # intra-chunk: A[t,j] = sum_i r[t,i] k[j,i] exp(cum[t-1,i]-cum[j,i]), j<t
+        # exponent = (cum[t] - w[t]) - cum[j] <= 0 for j <= t-1
+        e_t = cum - wc  # cum_{t-1}
+        dmat = e_t[:, :, None] - cum[:, None, :]  # (B,t,j,H,hs)
+        A = jnp.einsum("bthi,bjhi,btjhi->bhtj", rc, kc,
+                       jnp.exp(jnp.minimum(dmat, 0.0)) * tri_lower[None, :, :, None, None])
+        # diagonal bonus term
+        diag = jnp.einsum("bthi,bthi->bht", rc, u[None, None] * kc)
+        A = A + jnp.eye(c)[None, None] * diag[..., None]
+        y = jnp.einsum("bhtj,bjhi->bthi", A, vc)
+        # cross-chunk: y_t += (r_t * exp(cum_{t-1})) . S0
+        r_dec = rc * jnp.exp(e_t)
+        y = y + jnp.einsum("bthi,bhij->bthj", r_dec, S0)
+        # state update: S1 = diag(exp(cum_c)) S0 + sum_j exp(cum_c - cum_j) k_j v_j^T
+        tot = cum[:, -1]  # (B,H,hs)
+        k_dec = kc * jnp.exp(tot[:, None] - cum)
+        S1 = jnp.exp(tot)[..., None] * S0 + jnp.einsum("bjhi,bjhv->bhiv", k_dec, vc)
+        return S1, y
+
+    final, ys = jax.lax.scan(
+        chunk_step, state.astype(jnp.float32),
+        (rs.transpose(1, 0, 2, 3, 4), ks.transpose(1, 0, 2, 3, 4),
+         vs.transpose(1, 0, 2, 3, 4), ws.transpose(1, 0, 2, 3, 4)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S + pad, H, hs)[:, :S]
+    return y, final
+
+
+def _groupnorm_heads(y, scale, eps=1e-5):
+    """Per-head layernorm on (B,S,H,hs), then flatten and scale."""
+    B, S, H, hs = y.shape
+    mu = y.mean(-1, keepdims=True)
+    var = ((y - mu) ** 2).mean(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + eps)
+    return y.reshape(B, S, H * hs) * scale.astype(y.dtype)
+
+
+def rwkv6_prefill(params, cfg: ModelConfig, x, state: Dict):
+    """state: {"s": (B,H,hs,hs) f32, "shift": (B,1,D)}. Returns (out, state')."""
+    r, k, v, g, logw = _rwkv_rkvwg(params, cfg, x, state["shift"])
+    y, s1 = wkv6_chunked(r, k, v, logw, params["bonus_u"], state["s"])
+    out = _groupnorm_heads(y, params["ln_y"]).astype(x.dtype) * g
+    return out @ params["wo"], {"s": s1, "shift": x[:, -1:]}
+
+
+def rwkv6_decode(params, cfg: ModelConfig, x1, state: Dict):
+    """Single-token step. y = r.(S + (u*k) v^T); S' = e^{logw} (.) S + k v^T."""
+    r, k, v, g, logw = _rwkv_rkvwg(params, cfg, x1, state["shift"])
+    rf, kf, vf = (a[:, 0].astype(jnp.float32) for a in (r, k, v))
+    S0 = state["s"]
+    u = params["bonus_u"][None]
+    y = jnp.einsum("bhi,bhij->bhj", rf, S0) + (
+        jnp.einsum("bhi,bhi->bh", rf, u * kf)[..., None] * vf)
+    S1 = jnp.exp(logw[:, 0])[..., None] * S0 + jnp.einsum("bhi,bhv->bhiv", kf, vf)
+    y = y[:, None].reshape(*x1.shape[:2], -1, cfg.rwkv_head_size)
+    out = _groupnorm_heads(y, params["ln_y"]).astype(x1.dtype) * g
+    return out @ params["wo"], {"s": S1, "shift": x1}
+
+
+def rwkv6_init_state(cfg: ModelConfig, batch: int):
+    hs = cfg.rwkv_head_size
+    _, nh_pad, _ = _rwkv_dims(cfg)
+    return {"s": jnp.zeros((batch, nh_pad, hs, hs), jnp.float32),
+            "shift": jnp.zeros((batch, 1, cfg.d_model), cfg.jnp_dtype)}
+
+
+# RWKV channel-mix (the family's MLP replacement)
+def rwkv_cmix_skeleton(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {"mu_k": sds((d,), cfg.dtype), "mu_r": sds((d,), cfg.dtype),
+            "wk": sds((d, cfg.d_ff), cfg.dtype),
+            "wv": sds((cfg.d_ff, d), cfg.dtype),
+            "wr": sds((d, d), cfg.dtype)}
+
+
+def rwkv_cmix(params, cfg: ModelConfig, x, x_prev):
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    lerp = lambda mu: x + (shifted - x) * jax.nn.sigmoid(
+        mu.astype(jnp.float32)).astype(x.dtype)
+    kx, rx = lerp(params["mu_k"]), lerp(params["mu_r"])
+    k = jnp.square(jax.nn.relu(kx @ params["wk"]))
+    return jax.nn.sigmoid(rx @ params["wr"]) * (k @ params["wv"]), x[:, -1:]
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU (RecurrentGemma / Griffin)
+# --------------------------------------------------------------------------- #
+RGLRU_C = 8.0
+
+
+def rglru_skeleton(cfg: ModelConfig) -> Dict[str, Any]:
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "w_in": sds((d, w), cfg.dtype),   # recurrent branch input proj
+        "w_gate": sds((d, w), cfg.dtype),  # gelu gate branch
+        "w_out": sds((w, d), cfg.dtype),
+        "conv_k": sds((cfg.conv1d_width, w), cfg.dtype),
+        "conv_b": sds((w,), cfg.dtype),
+        "w_a": sds((w, w), cfg.dtype), "b_a": sds((w,), "float32"),
+        "w_i": sds((w, w), cfg.dtype), "b_i": sds((w,), "float32"),
+        "lam": sds((w,), "float32"),  # Λ — per-channel base decay
+    }
+
+
+def _causal_conv1d(u, kern, bias, prev):
+    """u: (B,S,W); kern: (K,W); prev: (B,K-1,W) carried inputs."""
+    K = kern.shape[0]
+    full = jnp.concatenate([prev, u], axis=1)
+    out = sum(full[:, i : i + u.shape[1]] * kern[K - 1 - i]
+              for i in range(K))
+    return out + bias, full[:, -(K - 1):]
+
+
+def _rglru_gates(params, u):
+    a_gate = jax.nn.sigmoid(u.astype(jnp.float32) @ params["w_a"].astype(jnp.float32)
+                            + params["b_a"])
+    i_gate = jax.nn.sigmoid(u.astype(jnp.float32) @ params["w_i"].astype(jnp.float32)
+                            + params["b_i"])
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"]) * a_gate  # <= 0
+    return log_a, i_gate
+
+
+def rglru_prefill(params, cfg: ModelConfig, x, state: Dict):
+    """state: {"h": (B,W) f32, "conv": (B,K-1,W)}. Associative-scan prefill."""
+    u = x @ params["w_in"]
+    u, conv1 = _causal_conv1d(u, params["conv_k"], params["conv_b"],
+                              state["conv"].astype(x.dtype))
+    log_a, i_gate = _rglru_gates(params, u)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i_gate * u.astype(jnp.float32))
+    # fold carried state into the first step: h_1 = a_1 h_0 + b_1
+    b = b.at[:, 0].add(a[:, 0] * state["h"])
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    del a_sc
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    out = (h.astype(x.dtype) * gate) @ params["w_out"]
+    return out, {"h": h[:, -1], "conv": conv1}
+
+
+def rglru_decode(params, cfg: ModelConfig, x1, state: Dict):
+    u = x1 @ params["w_in"]
+    u, conv1 = _causal_conv1d(u, params["conv_k"], params["conv_b"],
+                              state["conv"].astype(x1.dtype))
+    log_a, i_gate = _rglru_gates(params, u[:, 0:1])
+    a = jnp.exp(log_a[:, 0])
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i_gate[:, 0] * u[:, 0].astype(jnp.float32))
+    h = a * state["h"] + b
+    gate = jax.nn.gelu(x1 @ params["w_gate"])
+    out = (h[:, None].astype(x1.dtype) * gate) @ params["w_out"]
+    return out, {"h": h, "conv": conv1}
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int):
+    return {"h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, cfg.lru_width),
+                              cfg.jnp_dtype)}

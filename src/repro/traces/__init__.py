@@ -1,0 +1,1 @@
+from .agentic import TraceConfig, generate_conversation, generate_trace, workload_stats

@@ -1,0 +1,4 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_state_skeleton, adamw_update
+from .train_step import chunked_xent, make_loss_fn, make_train_step
+from .data import DataConfig, SyntheticLM
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint

@@ -1,0 +1,100 @@
+"""Numpy-backed checkpointing with elastic resharding.
+
+Layout: <dir>/step_<n>/
+    manifest.json   — step, flat key list, shapes/dtypes, config fingerprint
+    <idx>.npy       — one file per leaf (flattened tree, keystr-indexed)
+
+Leaves are saved UNSHARDED (gathered), so a checkpoint written from one mesh
+restores onto any other — elastic scaling across restarts. Writes are
+atomic (tmp dir + rename); `latest_step` scans for the newest complete
+manifest, so a crash mid-write can never corrupt restore (fault tolerance
+for the training path; the serving path journals conversations instead)."""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flat(tree):
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    return [(jax.tree_util.keystr(p), l) for p, l in leaves]
+
+
+def save_checkpoint(ckpt_dir: str, step: int, params, opt_state,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    ckpt_dir = Path(ckpt_dir)
+    tmp = ckpt_dir / f".tmp_step_{step}"
+    final = ckpt_dir / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    manifest = {"step": step, "keys": [], "extra": extra or {}}
+    for prefix, tree in (("params", params), ("opt", opt_state)):
+        for i, (key, leaf) in enumerate(_flat(tree)):
+            arr = np.asarray(jax.device_get(leaf))
+            fname = f"{prefix}_{i:05d}.npy"
+            np.save(tmp / fname, arr)
+            manifest["keys"].append(
+                {"tree": prefix, "key": key, "file": fname,
+                 "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return str(final)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = []
+    for p in d.iterdir():
+        if p.name.startswith("step_") and (p / "manifest.json").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, params_like, opt_like,
+                       shardings: Optional[Tuple[Any, Any]] = None):
+    """Restore into the STRUCTURE of (params_like, opt_like) — trees of
+    arrays or ShapeDtypeStructs. With `shardings` (pytrees of NamedSharding)
+    leaves are placed directly onto the (possibly different) target mesh —
+    the elastic-resharding path."""
+    d = Path(ckpt_dir) / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    by_tree: Dict[str, Dict[str, np.ndarray]] = {"params": {}, "opt": {}}
+    for ent in manifest["keys"]:
+        by_tree[ent["tree"]][ent["key"]] = np.load(d / ent["file"])
+
+    def rebuild(like, saved, shard_tree):
+        leaves = jax.tree_util.tree_leaves_with_path(like)
+        shards = (jax.tree_util.tree_leaves(shard_tree)
+                  if shard_tree is not None else [None] * len(leaves))
+        out = []
+        for (path, leaf), sh in zip(leaves, shards):
+            key = jax.tree_util.keystr(path)
+            if key not in saved:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = saved[key].astype(leaf.dtype)
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                    f"target {leaf.shape}")
+            out.append(jax.device_put(arr, sh) if sh is not None
+                       else jnp.asarray(arr))
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    p_sh, o_sh = shardings if shardings else (None, None)
+    params = rebuild(params_like, by_tree["params"], p_sh)
+    opt = rebuild(opt_like, by_tree["opt"], o_sh)
+    return params, opt, manifest["extra"]

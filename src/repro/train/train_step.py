@@ -1,0 +1,110 @@
+"""Training step: remat'd forward, chunked-vocab cross-entropy (never
+materializes the (B,S,V) logits — the loss scans the sequence in chunks),
+optional bf16 gradient compression (halves the data-parallel all-reduce
+bytes), and gradient accumulation for microbatching."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from .optimizer import AdamWConfig, adamw_update
+
+
+def chunked_xent(model: Model, params, hidden, labels, chunk: int = 512):
+    """hidden: (B,S,D) post-norm; labels: (B,S) int32 (-1 = masked).
+    Scans sequence chunks; each step materializes only (B,chunk,V)."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = (S + pad) // chunk
+    hc = hidden.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_nll(h, l):
+        # remat'd: backward recomputes the (B,C,V) logits/softmax from the
+        # tiny hidden chunk instead of the scan saving full-vocab residuals
+        # for every chunk (that residual set is B*S*V*4B — the dominant
+        # training temporary without this; see EXPERIMENTS.md §Perf).
+        logits = model.logits(params, h).astype(jnp.float32)  # (B,C,V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
+        valid = (l >= 0).astype(jnp.float32)
+        nll = (lse - tgt) * valid
+        return nll.sum(), valid.sum()
+
+    def step(carry, xs):
+        h, l = xs
+        nll_sum, valid_sum = chunk_nll(h, l)
+        loss_sum, count = carry
+        return (loss_sum + nll_sum, count + valid_sum), None
+
+    (loss_sum, count), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)),
+                                        (hc, lc))
+    return loss_sum / jnp.maximum(count, 1.0)
+
+
+def make_loss_fn(model: Model, *, remat: bool = True, loss_chunk: int = 512):
+    def loss_fn(params, batch):
+        h = model.hidden(params, batch["tokens"],
+                         frontend_embeds=batch.get("frontend_embeds"),
+                         remat=remat)
+        return chunked_xent(model, params, h, batch["labels"],
+                            chunk=loss_chunk)
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
+                    remat: bool = True, loss_chunk: int = 512,
+                    grad_accum: int = 1, compress_grads: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). With grad_accum > 1 the batch's leading dim is split into
+    microbatches scanned sequentially (activation memory / grad_accum).
+    compress_grads casts gradients to bf16 before the (GSPMD-inserted)
+    data-parallel all-reduce — a distributed-optimization knob."""
+    loss_fn = make_loss_fn(model, remat=remat, loss_chunk=loss_chunk)
+
+    def grads_of(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if compress_grads:
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.bfloat16), grads)
+        return loss, grads
+
+    def train_step(params, opt_state, batch):
+        if grad_accum > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_step(carry, mb):
+                loss_a, g_a = carry
+                loss, g = grads_of(params, mb)
+                g_a = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_a, g)
+                return (loss_a + loss, g_a), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_step, (jnp.float32(0), g0),
+                                            micro)
+            loss = loss / grad_accum
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+        else:
+            loss, grads = grads_of(params, batch)
+
+        params, opt_state, metrics = adamw_update(opt_cfg, grads, opt_state,
+                                                  params)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,21 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: deliberately NO XLA_FLAGS here — tests run on the single real CPU
+# device; only launch/dryrun.py forces 512 host devices (see system design).
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

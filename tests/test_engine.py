@@ -1,0 +1,139 @@
+"""Real-engine tests: token-exact equality with a direct model rollout
+through slot buffers / padding / masking, multi-turn append correctness,
+KV transfer between replicas, and the full EngineServer loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import make_scheduler
+from repro.core.metrics import summarize
+from repro.engine import EngineServer, ReplicaEngine, bucket_len
+from repro.models import build_model
+from repro.traces import TraceConfig, generate_trace
+
+from repro.models.model import merge_decode_cache as merge
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def oracle_rollout(model, params, cfg, prompt, n_steps):
+    lg, caches = model.prefill(params, jnp.asarray(prompt)[None])
+    toks = [int(jnp.argmax(lg[0, : cfg.vocab_size]))]
+    pos = len(prompt)
+    for _ in range(n_steps):
+        lg, ups = model.decode_step(params, jnp.asarray([toks[-1]]), caches,
+                                    jnp.asarray([pos]))
+        caches = merge(caches, ups)
+        pos += 1
+        toks.append(int(jnp.argmax(lg[0, : cfg.vocab_size])))
+    return toks
+
+
+def test_bucket_len():
+    assert bucket_len(1) == 32 and bucket_len(33) == 64
+    assert bucket_len(4096) == 4096 and bucket_len(5000) == 8192
+
+
+def test_engine_matches_oracle(qwen):
+    cfg, model, params = qwen
+    eng = ReplicaEngine(cfg, params, n_slots=4, max_ctx=256)
+    slot = eng.kv.acquire()
+    prompt = np.arange(11, 48, dtype=np.int32)  # 37 -> bucket 64 (padded)
+    tok, _ = eng.prefill_conversation(slot, prompt)
+    got = [int(tok)]
+    for _ in range(6):
+        nt = np.zeros(4, np.int32)
+        em = np.zeros(4, bool)
+        nt[slot], em[slot] = got[-1], True
+        sampled, _ = eng.decode_step_all(nt, em)
+        got.append(int(sampled[slot]))
+    want = oracle_rollout(model, params, cfg, prompt, 6)
+    assert got == want
+
+
+def test_engine_multiturn_append_matches_oracle(qwen):
+    """prefill -> decode -> append-prefill -> decode == oracle over the
+    concatenated token stream (ConServe's pinned-tail path)."""
+    cfg, model, params = qwen
+    eng = ReplicaEngine(cfg, params, n_slots=2, max_ctx=256)
+    slot = eng.kv.acquire()
+    t1 = np.arange(5, 30, dtype=np.int32)     # 25 tokens
+    append = np.arange(100, 117, dtype=np.int32)  # 17 tokens
+
+    tok1, _ = eng.prefill_conversation(slot, t1)
+    tok2, _ = eng.append_prefill(slot, append)
+
+    # oracle: exact full prefill over [t1, append]
+    full = np.concatenate([t1, append])
+    lg, _ = model.prefill(params, jnp.asarray(full)[None])
+    want = int(jnp.argmax(lg[0, : cfg.vocab_size]))
+    assert int(tok2) == want
+
+
+def test_kv_transfer_between_replicas_preserves_tokens(qwen):
+    """Prefill on replica A, transfer the slot to replica B, continue
+    decoding there — tokens must match the single-replica rollout (the
+    correctness contract behind ConServe's one-shot transfer)."""
+    cfg, model, params = qwen
+    a = ReplicaEngine(cfg, params, n_slots=2, max_ctx=256, replica_id=0,
+                      role="prefill")
+    b = ReplicaEngine(cfg, params, n_slots=2, max_ctx=256, replica_id=1)
+    prompt = np.arange(3, 40, dtype=np.int32)
+    sa = a.kv.acquire()
+    tok, _ = a.prefill_conversation(sa, prompt)
+    pkg = a.kv.export_slot(sa)
+    a.kv.release(sa)
+    sb = b.kv.acquire()
+    b.kv.import_slot(sb, pkg)
+    got = [int(tok)]
+    for _ in range(5):
+        nt = np.zeros(2, np.int32)
+        em = np.zeros(2, bool)
+        nt[sb], em[sb] = got[-1], True
+        sampled, _ = b.decode_step_all(nt, em)
+        got.append(int(sampled[sb]))
+    want = oracle_rollout(model, params, cfg, prompt, 5)
+    assert got == want
+
+
+def test_slot_exhaustion_raises(qwen):
+    cfg, model, params = qwen
+    eng = ReplicaEngine(cfg, params, n_slots=2, max_ctx=64)
+    eng.kv.acquire()
+    eng.kv.acquire()
+    with pytest.raises(RuntimeError):
+        eng.kv.acquire()
+
+
+def test_engine_server_conserve_end_to_end(qwen):
+    cfg, model, params = qwen
+    tc = TraceConfig(first_input_median=60, first_input_sigma=0.3,
+                     first_input_max=150, append_median=16, append_sigma=0.4,
+                     append_max=40, output_median=6, output_sigma=0.5,
+                     output_max=12, mean_turns=2.5, max_turns=4,
+                     tool_mean_s=0.02)
+    trace = generate_trace(6, 3.0, cfg=tc)
+    reps = [ReplicaEngine(cfg, params, n_slots=8, max_ctx=512, replica_id=0,
+                          role="prefill"),
+            ReplicaEngine(cfg, params, n_slots=8, max_ctx=512, replica_id=1),
+            ReplicaEngine(cfg, params, n_slots=8, max_ctx=512, replica_id=2)]
+    srv = EngineServer(make_scheduler("conserve"), reps)
+    recs = srv.serve(trace)
+    s = summarize(recs)
+    assert s["n_conversations"] == 6
+    assert s["kv_transfers_per_conv"] == 1.0  # exactly once, for real
+    assert srv.n_transfers == 6
+    # occupancy fully drained on every replica
+    for r in reps:
+        assert not r.kv.active.any()
+        assert r.kv.active_kv_tokens == 0
+    for st in srv.states.values():
+        assert st.active_conversations == 0

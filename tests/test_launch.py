@@ -1,0 +1,39 @@
+"""Launch-layer logic that doesn't need 512 devices: cell support rules and
+the HLO collective parser."""
+import pytest
+
+from repro.configs import ASSIGNED, SHAPES
+from repro.launch.dryrun import parse_collectives
+from repro.launch.specs import cell_supported
+
+
+def test_long_500k_support_rules():
+    ok = {a for a in ASSIGNED if cell_supported(a, "long_500k")[0]}
+    assert ok == {"rwkv6-3b", "recurrentgemma-9b"}
+    # gemma3 is excluded by its published 128k max context, not by attention
+    sup, reason = cell_supported("gemma3-12b", "long_500k")
+    assert not sup and "max_seq" in reason
+
+
+def test_all_other_cells_supported():
+    for a in ASSIGNED:
+        for s in SHAPES:
+            if s == "long_500k":
+                continue
+            assert cell_supported(a, s)[0], (a, s)
+
+
+def test_collective_parser():
+    hlo = """
+  %ar = bf16[16,128,512]{2,1,0} all-reduce(bf16[16,128,512] %x), replica_groups={}
+  %ag.1 = f32[256,1024]{1,0} all-gather(f32[16,1024] %y), dimensions={0}
+  %p = (bf16[8,8]{1,0}, bf16[8,8]{1,0}) all-to-all(%a, %b)
+  %cp = u32[4]{0} collective-permute(u32[4] %z)
+  %not_a_collective = f32[2]{0} add(f32[2] %a, f32[2] %b)
+"""
+    totals, counts = parse_collectives(hlo)
+    assert counts["all-reduce"] == 1 and totals["all-reduce"] == 16*128*512*2
+    assert counts["all-gather"] == 1 and totals["all-gather"] == 256*1024*4
+    assert counts["all-to-all"] == 1 and totals["all-to-all"] == 2*8*8*2
+    assert counts["collective-permute"] == 1 and totals["collective-permute"] == 16
+    assert sum(counts.values()) == 4

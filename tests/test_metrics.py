@@ -1,0 +1,59 @@
+"""Conversation-level metric definitions (TTFET, last-turn TBT, E2E, SLO)."""
+import numpy as np
+import pytest
+
+from repro.core.metrics import (ConversationRecord, SLOThresholds, TurnRecord,
+                                gmean, p95, per_turn_distributions, summarize)
+
+
+def rec(arrival=0.0, turns=((1.0, 2.0, 5), (4.0, 6.0, 10))):
+    r = ConversationRecord(cid=0, arrival_s=arrival)
+    for i, (ft, lt, n) in enumerate(turns):
+        r.turns.append(TurnRecord(turn_idx=i, arrival_s=ft - 0.5,
+                                  first_token_s=ft, last_token_s=lt,
+                                  n_output_tokens=n))
+    return r
+
+
+def test_ttfet_is_final_turn_first_token():
+    r = rec()
+    assert r.ttfet_s == 4.0  # first token of the LAST turn, from arrival
+    assert r.e2e_s == 6.0
+    assert r.ttfet_s <= r.e2e_s
+
+
+def test_last_turn_tbt():
+    r = rec()
+    assert abs(r.last_turn_tbt_s - (6.0 - 4.0) / 9) < 1e-9
+
+
+def test_single_token_turn_has_zero_tbt():
+    r = rec(turns=((1.0, 1.0, 1),))
+    assert r.last_turn_tbt_s == 0.0
+
+
+def test_slo_violations():
+    slo = SLOThresholds(ttfet_s=1.0, last_tbt_s=0.1, e2e_s=2.0)
+    ok = rec(turns=((1.0, 2.0, 30),))            # ttfet 1.0 < 5.0
+    bad = rec(turns=((9.0, 9.5, 2),))            # ttfet 9.0 > 5.0
+    v = slo.violations([ok, bad])
+    assert v["ttfet"] == 0.5
+
+
+def test_summarize_keys_and_energy():
+    s = summarize([rec()], energy_joules=100.0, total_tokens=1500)
+    assert s["tokens_per_joule"] == 15.0
+    assert s["n_conversations"] == 1
+    assert s["ttfet_gmean"] == pytest.approx(4.0)
+
+
+def test_per_turn_distributions_sorted():
+    d = per_turn_distributions([rec(), rec()])
+    assert (np.diff(d["ttft"]) >= 0).all()
+    assert (np.diff(d["tbt"]) >= 0).all()
+
+
+def test_gmean_p95():
+    assert gmean([2.0, 8.0]) == pytest.approx(4.0)
+    xs = list(np.arange(1, 101, dtype=float))
+    assert p95(xs) == pytest.approx(95.05)

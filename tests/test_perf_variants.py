@@ -1,0 +1,103 @@
+"""§Perf variant correctness: each hillclimb flag must preserve model
+semantics (the optimization rule: keep the speedup, prove it right)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.train import AdamWConfig, adamw_init, make_train_step
+
+
+def test_flash_vjp_matches_scan_path_grads(key):
+    cfg0 = get_reduced("olmo-1b")
+    cfg1 = dataclasses.replace(cfg0, flash_vjp=True)
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (2, 64), 0,
+                              cfg0.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    m0, m1 = build_model(cfg0), build_model(cfg1)
+    params = m0.init(key)
+    opt = adamw_init(params)
+    p0, _, s0 = make_train_step(m0, AdamWConfig())(params, opt, batch)
+    p1, _, s1 = make_train_step(m1, AdamWConfig())(params, opt, batch)
+    assert abs(float(s0["loss"]) - float(s1["loss"])) < 1e-6
+    d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                  - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree_util.tree_leaves(p0),
+                            jax.tree_util.tree_leaves(p1)))
+    assert d < 1e-6  # identical parameter update
+
+
+def test_int8_kv_decode_close_to_bf16(key):
+    """Quantized cache decode stays within quantization tolerance of the
+    exact path (int8 with scale 0.05 ⇒ ~2.5% value grid)."""
+    cfg0 = get_reduced("qwen3-0.6b")
+    cfg1 = dataclasses.replace(cfg0, kv_cache_dtype="int8")
+    m0, m1 = build_model(cfg0), build_model(cfg1)
+    params = m0.init(key)
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (2, 24), 0,
+                              cfg0.vocab_size)
+    _, c0 = m0.prefill(params, toks[:, :-1])
+    lg0, _ = m0.decode_step(params, toks[:, -1], c0,
+                            jnp.full((2,), 23, jnp.int32))
+    # quantize the same prefilled cache for the int8 model
+    from repro.models.attention import quantize_kv
+    c1 = jax.tree_util.tree_map_with_path(
+        lambda p, l: quantize_kv(l, cfg1)
+        if str(getattr(p[-1], "key", p[-1])) in ("k", "v") else l, c0)
+    lg1, ups = m1.decode_step(params, toks[:, -1], c1,
+                              jnp.full((2,), 23, jnp.int32))
+    # logits close in a relative sense; argmax usually preserved
+    err = float(jnp.max(jnp.abs(lg0 - lg1)))
+    spread = float(jnp.max(jnp.abs(lg0)))
+    assert err < 0.15 * spread, f"int8 decode err {err} vs spread {spread}"
+    # new cache entries come back quantized
+    kleaves = [l for p, l in jax.tree_util.tree_leaves_with_path(ups)
+               if str(getattr(p[-1], "key", p[-1])) in ("k", "v")]
+    assert all(l.dtype == jnp.int8 for l in kleaves)
+
+
+def test_rwkv_pad_heads_consistency(key):
+    cfg = dataclasses.replace(get_reduced("rwkv6-3b"), rwkv_pad_heads_to=6)
+    m = build_model(cfg)
+    params = m.init(key)
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (2, 17), 0,
+                              cfg.vocab_size)
+    lg_full, _ = m.prefill(params, toks)
+    _, caches = m.prefill(params, toks[:, :-1])
+    lg_dec, _ = m.decode_step(params, toks[:, -1], caches,
+                              jnp.full((2,), 16, jnp.int32))
+    assert float(jnp.max(jnp.abs(lg_full - lg_dec))) < 2e-4
+    assert bool(jnp.isfinite(lg_full.astype(jnp.float32)).all())
+
+
+def test_unrolled_probe_mode_matches_scan(key):
+    """Measurement-mode (unrolled layers + block-full attention) must be
+    semantically identical to the production scan path."""
+    cfg0 = get_reduced("gemma3-12b")
+    cfg1 = dataclasses.replace(cfg0, unroll_layers=True, attn_block_full=True)
+    m0, m1 = build_model(cfg0), build_model(cfg1)
+    params = m0.init(key)
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (2, 16), 0,
+                              cfg0.vocab_size)
+    h0 = m0.hidden(params, toks)
+    h1 = m1.hidden(params, toks)
+    assert float(jnp.max(jnp.abs(h0.astype(jnp.float32)
+                                 - h1.astype(jnp.float32)))) < 2e-4
+
+
+def test_remat_granularity_preserves_loss(key):
+    cfg0 = get_reduced("olmo-1b")
+    toks = jax.random.randint(key, (2, 32), 0, cfg0.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    losses = {}
+    for gran in ("group", "layer", "both"):
+        cfg = dataclasses.replace(cfg0, remat_granularity=gran)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        _, _, s = make_train_step(m, AdamWConfig())(params, opt, batch)
+        losses[gran] = float(s["loss"])
+    assert max(losses.values()) - min(losses.values()) < 1e-5

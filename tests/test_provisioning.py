@@ -1,0 +1,36 @@
+"""Instance-configuration math (§4.1) incl. the paper's own sanity check."""
+import math
+
+from repro.core.provisioning import (NodeRates, WorkloadStats, min_decoders,
+                                     paper_configuration,
+                                     prefiller_saturation_rate, provision,
+                                     slots_per_decoder)
+
+
+def test_paper_sanity_check():
+    """§5.1: 25k tok/s prefill, 15k in + 1k out per conversation =>
+    R* = 1.67 conv/s and >= 1.67 decoders per prefiller; N=3 more than
+    satisfies the bound (prefiller saturates first)."""
+    rates, stats = paper_configuration()
+    r_star = prefiller_saturation_rate(rates, stats)
+    assert abs(r_star - 25_000 / 15_000) < 1e-9
+    n_tp, n_mem = min_decoders(r_star, rates, stats)
+    assert abs(n_tp - 1.6667) < 1e-3
+    n = provision(rates, stats)
+    assert n > max(n_tp, n_mem)
+    assert n <= 3  # the paper's 3-decoder box satisfies it with slack
+
+
+def test_slots_from_memory():
+    rates, stats = paper_configuration()
+    b = slots_per_decoder(rates, stats)
+    assert b == int(300_000 // 16_000)
+
+
+def test_memory_constraint_can_dominate():
+    rates = NodeRates(25_000, 1_000, 50_000)
+    stats = WorkloadStats(mean_first_input=15_000, mean_decoder_volume=100,
+                          mean_lifetime_s=600, mean_peak_kv_tokens=25_000)
+    n_tp, n_mem = min_decoders(1.0, rates, stats)
+    assert n_mem > n_tp  # slots bind before throughput
+    assert provision(rates, stats) > n_mem / 1.0 * 0  # positive integer

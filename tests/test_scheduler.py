@@ -1,0 +1,92 @@
+"""Unit tests for scheduler policies over observable state only."""
+import pytest
+
+from repro.core import (AMPDScheduler, ConServeScheduler, ConversationView,
+                        FullDisaggScheduler, TurnView, make_scheduler)
+from repro.core.signals import ClusterView, NodeState, PrefillLatencyCurve
+
+
+def make_view(pf_queues=(0,), dec_kv=(0, 0, 0), tbt=None):
+    nodes = {}
+    nid = 0
+    for q in pf_queues:
+        nodes[nid] = NodeState(node_id=nid, role="prefill",
+                               queued_prefill_tokens=q)
+        nid += 1
+    for i, kv in enumerate(dec_kv):
+        n = NodeState(node_id=nid, role="decode", active_kv_tokens=kv)
+        if tbt:
+            n.observed_tbt_ema_s = tbt[i]
+        nodes[nid] = n
+        nid += 1
+    return ClusterView(nodes, PrefillLatencyCurve(1e-9, 4e-5, 0.01))
+
+
+CONV = ConversationView(cid=1, arrival_s=0.0, first_input_len=15000)
+
+
+class TestConServe:
+    def test_first_prefill_routes_to_prefiller(self):
+        s = ConServeScheduler()
+        pl = s.place_first_prefill(CONV, make_view())
+        assert pl.node_id == 0 and not pl.kv_transfer
+
+    def test_least_backlogged_prefiller(self):
+        s = ConServeScheduler()
+        v = make_view(pf_queues=(50_000, 1_000))
+        assert s.place_first_prefill(CONV, v).node_id == 1
+
+    def test_bind_min_kv_decoder_with_single_transfer(self):
+        s = ConServeScheduler()
+        v = make_view(dec_kv=(90_000, 20_000, 50_000))
+        pl = s.bind_decoder(CONV, v)
+        assert v.node(pl.node_id).active_kv_tokens == 20_000
+        assert pl.kv_transfer  # the one and only
+
+    def test_turns_pinned_no_transfer(self):
+        s = ConServeScheduler()
+        v = make_view()
+        s.bind_decoder(CONV, v)
+        for idx in range(1, 30):
+            t = TurnView(cid=1, turn_idx=idx, append_tokens=300,
+                         context_tokens=16000 + 300 * idx)
+            pl = s.place_turn(t, bound_decoder=2, view=v)
+            assert pl.node_id == 2 and not pl.kv_transfer
+
+    def test_straggler_screening_is_observational(self):
+        s = ConServeScheduler(straggler_factor=3.0)
+        v = make_view(dec_kv=(10, 20, 30), tbt=(0.5, 0.02, 0.02))
+        # node with min KV (10) is a 25x straggler -> excluded from binding
+        pl = s.bind_decoder(CONV, v)
+        assert v.node(pl.node_id).observed_tbt_ema_s <= 0.06
+
+
+class TestBaselines:
+    def test_full_disagg_migrates_every_turn(self):
+        s = FullDisaggScheduler()
+        v = make_view()
+        t = TurnView(cid=1, turn_idx=3, append_tokens=200, context_tokens=16000)
+        pl = s.place_turn(t, bound_decoder=2, view=v)
+        assert v.node(pl.node_id).role == "prefill" and pl.kv_transfer
+
+    def test_ampd_zero_error_reduces_to_conserve(self):
+        s = AMPDScheduler(wrong_prediction_rate=0.0)
+        v = make_view()
+        for idx in range(1, 50):
+            t = TurnView(cid=1, turn_idx=idx, append_tokens=250,
+                         context_tokens=15000)
+            pl = s.place_turn(t, bound_decoder=3, view=v)
+            assert pl.node_id == 3 and not pl.kv_transfer
+
+    def test_ampd_error_rate_controls_migrations(self):
+        s = AMPDScheduler(wrong_prediction_rate=0.25, seed=42)
+        v = make_view()
+        n = 4000
+        remote = sum(
+            s.place_turn(TurnView(1, i, 250, 15000), 3, v).kv_transfer
+            for i in range(n))
+        assert abs(remote / n - 0.25) < 0.03
+
+    def test_registry(self):
+        for name in ("conserve", "ampd", "collocated", "full_disagg"):
+            assert make_scheduler(name).name == name

@@ -1,0 +1,124 @@
+"""End-to-end behaviour tests for the full system: the paper's headline
+results reproduced through the calibrated cluster runtime, and the
+cross-layer contract (same scheduler code driving simulator and real
+engine)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import paper_deployment
+from repro.configs import get_reduced
+from repro.core import make_scheduler
+from repro.core.metrics import SLOThresholds, summarize
+from repro.engine import EngineServer, ReplicaEngine
+from repro.models import build_model
+from repro.traces import TraceConfig, generate_trace
+
+
+def baseline_slo() -> SLOThresholds:
+    """Single-request, interference-free baselines (5x multiplier, §5.3)."""
+    trace = generate_trace(1, 0.001, TraceConfig(seed=99))
+    sim = paper_deployment("conserve")
+    sim.submit(trace).run()
+    r = sim.results()[0]
+    return SLOThresholds(ttfet_s=max(r.ttfet_s, 1e-3),
+                         last_tbt_s=max(r.last_turn_tbt_s, 1e-4),
+                         e2e_s=max(r.e2e_s, 1e-3))
+
+
+class TestHeadlineResults:
+    """The paper's Q1-Q4, at reproduction scale."""
+
+    @pytest.fixture(scope="class")
+    def at_saturation(self):
+        trace = generate_trace(100, 1.63, TraceConfig(seed=17),
+                               arrival_process="saturation")
+        total_tokens = sum(c.total_input_tokens + c.total_output_tokens
+                           for c in trace)
+        out = {}
+        for system in ("conserve", "ampd", "collocated", "full_disagg"):
+            sim = paper_deployment(system)
+            sim.submit(trace).run()
+            out[system] = summarize(sim.results(),
+                                    energy_joules=sim.total_energy_j(),
+                                    total_tokens=total_tokens)
+        return out
+
+    def test_q1_conserve_best_p95_ttfet_among_disagg(self, at_saturation):
+        s = at_saturation
+        assert s["conserve"]["ttfet_p95"] <= s["ampd"]["ttfet_p95"]
+        assert s["conserve"]["ttfet_p95"] < s["full_disagg"]["ttfet_p95"]
+
+    def test_q1_full_disagg_uncompetitive_e2e(self, at_saturation):
+        s = at_saturation
+        assert s["full_disagg"]["e2e_gmean"] > 2.0 * s["conserve"]["e2e_gmean"]
+
+    def test_q3_ampd_pays_for_wrong_predictions(self, at_saturation):
+        s = at_saturation
+        # AMPD@10%: worse TTFET and worse energy than ConServe (Fig. 12)
+        assert s["ampd"]["ttfet_gmean"] > s["conserve"]["ttfet_gmean"]
+        assert s["ampd"]["tokens_per_joule"] < s["conserve"]["tokens_per_joule"]
+
+    def test_q4_heterogeneous_energy_win_latency_flat(self):
+        trace = generate_trace(80, 1.63, TraceConfig(seed=19),
+                               arrival_process="saturation")
+        total = sum(c.total_input_tokens + c.total_output_tokens
+                    for c in trace)
+        res = {}
+        for het in (False, True):
+            sim = paper_deployment("conserve", heterogeneous=het)
+            sim.submit(trace).run()
+            res[het] = summarize(sim.results(),
+                                 energy_joules=sim.total_energy_j(),
+                                 total_tokens=total)
+        gain = res[True]["tokens_per_joule"] / res[False]["tokens_per_joule"]
+        assert gain > 1.05  # energy win from capping the memory-bound tail
+        assert res[True]["ttfet_p95"] < 1.2 * res[False]["ttfet_p95"]
+
+    def test_q2_conserve_slo_headroom_vs_baselines(self, at_saturation):
+        slo = baseline_slo()
+        trace = generate_trace(100, 1.63, TraceConfig(seed=17),
+                               arrival_process="saturation")
+        rates = {}
+        for system in ("conserve", "full_disagg"):
+            sim = paper_deployment(system)
+            sim.submit(trace).run()
+            v = slo.violations(sim.results())
+            rates[system] = v
+        # FullDisagg blows TTFET SLO wholesale; ConServe strictly better
+        assert rates["full_disagg"]["ttfet"] > 0.5
+        assert rates["conserve"]["ttfet"] < rates["full_disagg"]["ttfet"]
+
+
+class TestCrossLayerContract:
+    def test_same_policy_object_drives_sim_and_engine(self):
+        """One scheduler implementation serves both runtimes — the core
+        claim that policy is independent of mechanism."""
+        tc = TraceConfig(first_input_median=60, first_input_sigma=0.2,
+                         first_input_max=120, append_median=12,
+                         append_sigma=0.3, append_max=24, output_median=5,
+                         output_sigma=0.4, output_max=10, mean_turns=2.0,
+                         max_turns=3, tool_mean_s=0.01)
+        trace = generate_trace(4, 5.0, cfg=tc)
+
+        sim = paper_deployment("conserve")
+        sim.submit(trace).run()
+        sim_recs = sim.results()
+
+        cfg = get_reduced("qwen3-0.6b")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        reps = [ReplicaEngine(cfg, params, n_slots=6, max_ctx=256,
+                              replica_id=0, role="prefill"),
+                ReplicaEngine(cfg, params, n_slots=6, max_ctx=256,
+                              replica_id=1),
+                ReplicaEngine(cfg, params, n_slots=6, max_ctx=256,
+                              replica_id=2)]
+        srv = EngineServer(make_scheduler("conserve"), reps)
+        eng_recs = srv.serve(trace)
+
+        # both runtimes complete everything with exactly one transfer each
+        assert len(sim_recs) == len(eng_recs) == 4
+        assert all(r.n_kv_transfers == 1 for r in sim_recs)
+        assert all(r.n_kv_transfers == 1 for r in eng_recs)
+        assert all(r.n_remote_turns == 0 for r in sim_recs + eng_recs)

@@ -1,0 +1,37 @@
+"""Agentic trace generator matches the paper's workload shape (Fig. 1 /
+§5.1 constants)."""
+import numpy as np
+
+from repro.traces import TraceConfig, generate_trace, workload_stats
+
+
+def test_turn1_heavy_turn2_light():
+    trace = generate_trace(300, 1.0, TraceConfig(seed=0))
+    first = [c.first_input_len for c in trace]
+    appends = [t.append_tokens for c in trace for t in c.turns[1:]]
+    assert 12_000 < np.mean(first) < 18_000   # tens of thousands (~15k)
+    assert np.mean(appends) < 800             # hundreds
+    assert np.mean(first) / np.mean(appends) > 20
+
+
+def test_outputs_high_variance():
+    trace = generate_trace(300, 1.0, TraceConfig(seed=1))
+    outs = np.array([t.output_tokens for c in trace for t in c.turns])
+    assert np.std(outs) > np.mean(outs)  # heavy-tailed
+
+
+def test_provisioning_stats_near_paper():
+    trace = generate_trace(500, 1.0, TraceConfig(seed=2))
+    ws = workload_stats(trace)
+    assert 13_000 < ws.mean_first_input < 17_000
+    assert ws.mean_decoder_volume < 6_000
+
+
+def test_determinism_and_arrival_processes():
+    a = generate_trace(20, 1.5, TraceConfig(seed=9))
+    b = generate_trace(20, 1.5, TraceConfig(seed=9))
+    assert all(x.first_input_len == y.first_input_len for x, y in zip(a, b))
+    sat = generate_trace(10, 2.0, TraceConfig(seed=3),
+                         arrival_process="saturation")
+    gaps = np.diff([c.arrival_s for c in sat])
+    assert np.allclose(gaps, 0.5)
