@@ -1,0 +1,142 @@
+"""Decode-tail throughput benchmark: before/after numbers for the zero-copy
+decode rebuild.
+
+Measures decode tokens/s vs active-slot count and live KV length for
+  * `reference`: the pre-PR single-step path — one jitted dispatch + host
+    sync + host-side argmax per token, cache folded via the copying
+    `append_step`;
+  * `fused`: the donated in-place multi-token scan (`decode_steps`) — one
+    dispatch per chunk, on-device sampling fed back, per-slot scatter fused
+    into the jit program, cache reads trimmed to the live-context bucket.
+
+Emits CSV rows through benchmarks.common and writes BENCH_decode_tail.json
+at the repo root so the perf trajectory is tracked PR over PR.
+
+Usage: PYTHONPATH=src python -m benchmarks.decode_tail [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from .common import emit
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_decode_tail.json"
+# quick (CI smoke) runs write a separate file so they never clobber the
+# committed full-grid trajectory record
+BENCH_QUICK_PATH = BENCH_PATH.with_name("BENCH_decode_tail_quick.json")
+
+
+def _make_engine(cfg, params, n_slots, max_ctx, n_active, prompt_len):
+    from repro.engine import ReplicaEngine
+    eng = ReplicaEngine(cfg, params, n_slots=n_slots, max_ctx=max_ctx)
+    nt = np.zeros(n_slots, np.int32)
+    em = np.zeros(n_slots, bool)
+    for i in range(n_active):
+        slot = eng.kv.acquire()
+        prompt = (np.arange(prompt_len, dtype=np.int32) * (i + 3)) \
+            % cfg.vocab_size
+        tok, _ = eng.prefill_conversation(slot, prompt)
+        nt[slot], em[slot] = int(tok), True
+    return eng, nt, em
+
+
+def _snapshot(eng):
+    import jax
+    import jax.numpy as jnp
+    return (jax.tree_util.tree_map(jnp.array, eng.kv.caches),
+            eng.kv.lengths.copy())
+
+
+def _restore(eng, snap):
+    import jax
+    import jax.numpy as jnp
+    caches, lengths = snap
+    # fresh copies: decode_steps donates its cache input, so the snapshot
+    # itself must never be handed to the engine
+    eng.kv.caches = jax.tree_util.tree_map(jnp.array, caches)
+    eng.kv.lengths = lengths.copy()
+
+
+def _run_reference(eng, nt, em, n_tokens):
+    nt = nt.copy()
+    t0 = time.perf_counter()
+    for _ in range(n_tokens):
+        sampled, _ = eng.decode_step_all_reference(nt, em)
+        nt[em] = sampled[em]
+    return time.perf_counter() - t0
+
+
+def _run_fused(eng, nt, em, n_tokens, chunk):
+    nt = nt.copy()
+    done = 0
+    t0 = time.perf_counter()
+    while done < n_tokens:
+        n = min(chunk, n_tokens - done)
+        seq, _ = eng.decode_steps(nt, em, n)
+        nt[em] = seq[n - 1][em]
+        done += n
+    return time.perf_counter() - t0
+
+
+def _measure(run, eng, nt, em, *args):
+    """Warm along the exact length trajectory (compiles every chunk / ctx
+    bucket the measured run will hit), then restore the KV snapshot and
+    time the steady state."""
+    snap = _snapshot(eng)
+    run(eng, nt, em, *args)          # warm-up pass: compile + execute
+    _restore(eng, snap)
+    dt = run(eng, nt, em, *args)     # measured pass: steady state
+    _restore(eng, snap)
+    return dt
+
+
+def main(quick: bool = False):
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import build_model
+
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    n_slots, max_ctx, chunk = 8, 512, 16
+    slot_counts = (8,) if quick else (1, 4, 8)
+    prompt_lens = (96,) if quick else (48, 96)
+    n_tokens = 32 if quick else 64
+
+    points = []
+    for n_active in slot_counts:
+        for prompt_len in prompt_lens:
+            eng, nt, em = _make_engine(cfg, params, n_slots, max_ctx,
+                                       n_active, prompt_len)
+            ref_s = _measure(_run_reference, eng, nt, em, n_tokens)
+            fus_s = _measure(_run_fused, eng, nt, em, n_tokens, chunk)
+            ref_tps = n_active * n_tokens / ref_s
+            fus_tps = n_active * n_tokens / fus_s
+            pt = {"n_active": n_active, "prompt_len": prompt_len,
+                  "chunk": chunk, "n_tokens": n_tokens,
+                  "reference_tok_s": ref_tps, "fused_tok_s": fus_tps,
+                  "speedup": fus_tps / ref_tps}
+            points.append(pt)
+            emit(f"decode_tail_b{n_active}_l{prompt_len}",
+                 ref_s / n_tokens * 1e6,
+                 f"ref={ref_tps:.1f}tok/s;fused={fus_tps:.1f}tok/s;"
+                 f"speedup={pt['speedup']:.2f}x")
+
+    payload = {"model": "qwen3-0.6b(reduced)", "backend": jax.default_backend(),
+               "n_slots": n_slots, "max_ctx": max_ctx, "quick": quick,
+               "points": points}
+    (BENCH_QUICK_PATH if quick else BENCH_PATH).write_text(
+        json.dumps(payload, indent=1))
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

@@ -341,7 +341,14 @@ def fig13_hetero():
          f"collocated_ttfet_penalty={co_pen:+.1%}")
 
 
+def decode_tail_bench():
+    """Decode-tail tokens/s: single-step reference vs fused donated scan
+    (writes BENCH_decode_tail.json at the repo root)."""
+    from . import decode_tail
+    decode_tail.main(quick=True)
+
+
 ALL = [fig01_trace_dist, fig02_prefill_curve, fig03_kv_transfer,
        fig04_tbt_heatmap, fig05_collocation, fig06_tbt_variance,
        fig07_powercap_prefill, fig08_powercap_decode, fig10_agentic_perf,
-       fig11_cdfs, fig12_wrong_prediction, fig13_hetero]
+       fig11_cdfs, fig12_wrong_prediction, fig13_hetero, decode_tail_bench]

@@ -38,6 +38,42 @@ def _write_slot(cache_leaf, new_leaf, slot: int, length: int, grouped: bool):
         (slot, 0) + (0,) * (cache_leaf.ndim - 2))
 
 
+def fold_decode_step(caches, updates, lens, mask, grouped, growing):
+    """Pure, jit-safe fold of one decode step's cache updates: growing
+    entries scatter at each slot's current length (dynamic ``.at[].set``),
+    fixed states replace where ``mask`` is set. This is the function the
+    fused donated decode step runs *inside* jit so XLA updates the cache
+    buffers in place; `SlotKVCache.append_step` below keeps the original
+    host-side copy path alive as the parity oracle.
+
+    caches/updates: pytrees; lens (n_slots,) int32 device array;
+    mask (n_slots,) bool device array; grouped/growing: static bool trees.
+    Returns the new caches pytree (same structure/shapes/dtypes)."""
+    n_slots = mask.shape[0]
+
+    def fold(cache_leaf, up_leaf, g, gr):
+        if gr:
+            idx_b = jnp.arange(n_slots)
+            if g:  # (G, B, L, ...) <- (G, B, 1, ...)
+                return cache_leaf.at[:, idx_b, lens].set(
+                    jnp.where(
+                        mask.reshape((1, -1) + (1,) * (up_leaf.ndim - 3)),
+                        up_leaf[:, :, 0].astype(cache_leaf.dtype),
+                        cache_leaf[:, idx_b, lens]))
+            return cache_leaf.at[idx_b, lens].set(
+                jnp.where(
+                    mask.reshape((-1,) + (1,) * (up_leaf.ndim - 2)),
+                    up_leaf[:, 0].astype(cache_leaf.dtype),
+                    cache_leaf[idx_b, lens]))
+        bdim = 1 if g else 0
+        shape = [1] * cache_leaf.ndim
+        shape[bdim] = n_slots
+        return jnp.where(mask.reshape(shape),
+                         up_leaf.astype(cache_leaf.dtype), cache_leaf)
+
+    return jax.tree_util.tree_map(fold, caches, updates, grouped, growing)
+
+
 class SlotKVCache:
     """Owns the cache pytree (batch dim = n_slots) plus per-slot lengths."""
 
@@ -111,40 +147,17 @@ class SlotKVCache:
         self.lengths[slot] = length
 
     def append_step(self, updates, emitted_mask: np.ndarray):
-        """Fold one decode step's cache updates in: growing entries land at
-        each slot's current length; states replace. emitted_mask marks slots
-        that actually decoded (others keep their state)."""
-        lens = jnp.asarray(self.lengths)
-        mask = jnp.asarray(emitted_mask)
-
-        def fold(path, cache_leaf, up_leaf, grouped, growing):
-            if growing:
-                # (G?, B, L, ...) <- write up (G?, B, 1, ...) at per-slot lens
-                if grouped:
-                    idx_b = jnp.arange(self.n_slots)
-                    new = cache_leaf.at[:, idx_b, lens].set(
-                        jnp.where(
-                            mask.reshape((1, -1) + (1,) * (up_leaf.ndim - 3)),
-                            up_leaf[:, :, 0].astype(cache_leaf.dtype),
-                            cache_leaf[:, idx_b, lens]))
-                else:
-                    idx_b = jnp.arange(self.n_slots)
-                    new = cache_leaf.at[idx_b, lens].set(
-                        jnp.where(
-                            mask.reshape((-1,) + (1,) * (up_leaf.ndim - 2)),
-                            up_leaf[:, 0].astype(cache_leaf.dtype),
-                            cache_leaf[idx_b, lens]))
-                return new
-            # state: keep old where not emitted
-            bdim = 1 if grouped else 0
-            shape = [1] * cache_leaf.ndim
-            shape[bdim] = self.n_slots
-            m = mask.reshape(shape)
-            return jnp.where(m, up_leaf.astype(cache_leaf.dtype), cache_leaf)
-
-        self.caches = jax.tree_util.tree_map_with_path(
-            lambda p, c, u, g, gr: fold(p, c, u, g, gr),
-            self.caches, updates, self._grouped, self._growing)
+        """REFERENCE PATH: fold one decode step's cache updates in from the
+        host side — growing entries land at each slot's current length;
+        states replace. emitted_mask marks slots that actually decoded
+        (others keep their state). The serving hot path runs the same fold
+        *inside* the donated jit program (one dispatch per chunk, in-place);
+        this per-token host-side version is the dispatch/copy baseline for
+        parity tests and benchmarks — true math independence comes from the
+        model-rollout oracles in the tests, not from this path."""
+        self.caches = fold_decode_step(
+            self.caches, updates, jnp.asarray(self.lengths),
+            jnp.asarray(emitted_mask), self._grouped, self._growing)
         self.lengths[emitted_mask] += 1
 
     # ----- transfer --------------------------------------------------------------

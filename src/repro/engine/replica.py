@@ -1,7 +1,17 @@
 """A model replica: params + slot KV cache + jitted prefill/decode programs,
 with bucketed prefill lengths (bounded recompilation) and greedy sampling.
 Runs real forward passes on whatever devices are visible (CPU here; the same
-code paths pjit onto a mesh slice in production)."""
+code paths pjit onto a mesh slice in production).
+
+Decode tail (the paper's memory-bound phase) is served by ONE jitted,
+buffer-donated program per (chunk, ctx) bucket: `jax.lax.scan` over up to
+`n` decode iterations with on-device greedy sampling fed back as the next
+token and the per-slot cache scatter fused into the step
+(`fold_decode_step`), so XLA writes the donated KV buffers in place — no
+per-token full-cache copy, one dispatch + one host sync per chunk instead
+of per token. `decode_step_all_reference` keeps the original
+one-dispatch-per-token + host-side `append_step` copy path as the parity
+oracle and benchmark baseline."""
 from __future__ import annotations
 
 import time
@@ -15,9 +25,12 @@ import numpy as np
 from repro.models import Model, build_model
 from repro.models.config import ModelConfig
 
-from .kvcache import SlotKVCache
+from .kvcache import SlotKVCache, fold_decode_step
 
 PREFILL_BUCKETS = (32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+DECODE_CHUNKS = (1, 2, 4, 8, 16, 32)
+CTX_BUCKET_MIN = 64
 
 
 def bucket_len(n: int) -> int:
@@ -25,6 +38,23 @@ def bucket_len(n: int) -> int:
         if n <= b:
             return b
     return -(-n // 4096) * 4096
+
+
+def decode_chunk_bucket(n: int) -> int:
+    """Smallest compiled scan length covering n steps (bounds recompiles;
+    steps beyond the live count are masked out inside the scan)."""
+    for b in DECODE_CHUNKS:
+        if n <= b:
+            return b
+    return DECODE_CHUNKS[-1]
+
+
+def ctx_bucket(n: int, max_ctx: int) -> int:
+    """Power-of-two live-context bucket for the trimmed decode read."""
+    b = CTX_BUCKET_MIN
+    while b < n:
+        b *= 2
+    return min(b, max_ctx)
 
 
 class ReplicaEngine:
@@ -45,6 +75,8 @@ class ReplicaEngine:
         self._decode = jax.jit(
             lambda p, t, c, pos, lens: self.model.decode_step(
                 p, t, c, pos, kv_lens=lens))
+        # fused donated decode programs, keyed by (scan length, ctx bucket)
+        self._fused: Dict[Tuple[int, int], Any] = {}
 
     # ----- sampling -------------------------------------------------------------
     def sample(self, logits) -> np.ndarray:
@@ -99,11 +131,87 @@ class ReplicaEngine:
         return self.sample(logits)[0], dt
 
     # ----- decode -----------------------------------------------------------------
+    def _build_fused(self, n_steps: int, ctx_limit: Optional[int]):
+        """Jitted fused decode program: scan over `n_steps` iterations with
+        on-device greedy sampling fed back as the next token and the
+        per-slot cache scatter fused into the step. The cache pytree is
+        DONATED — XLA aliases the input buffers into the outputs, so the
+        decode tail appends in place instead of copying every leaf per
+        token. Steps with index >= n_live are masked no-ops (lets one
+        compiled bucket serve any chunk size up to n_steps)."""
+        grouped, growing = self.kv._grouped, self.kv._growing
+        vocab = self.cfg.vocab_size
+
+        def run(params, caches, tokens, lens, emit, n_live):
+            def body(carry, i):
+                caches, lens, tokens = carry
+                logits, updates = self.model.decode_step(
+                    params, tokens, caches, lens, kv_lens=lens,
+                    ctx_limit=ctx_limit)
+                sampled = jnp.argmax(logits[:, :vocab], axis=-1).astype(
+                    jnp.int32)
+                live = emit & (i < n_live)
+                caches = fold_decode_step(caches, updates, lens, live,
+                                          grouped, growing)
+                lens = lens + live.astype(lens.dtype)
+                tokens = jnp.where(live, sampled, tokens)
+                return (caches, lens, tokens), sampled
+
+            (caches, lens, tokens), seq = jax.lax.scan(
+                body, (caches, lens, tokens), jnp.arange(n_steps))
+            return caches, seq
+
+        return jax.jit(run, donate_argnums=(1,))
+
+    def decode_steps(self, next_tokens: np.ndarray, emit_mask: np.ndarray,
+                     n: int) -> Tuple[np.ndarray, float]:
+        """Run up to `n` fused decode iterations across ALL slots in ONE
+        dispatch (inactive slots compute in lockstep but are masked out).
+        Every emitting slot consumes exactly `n` tokens — the caller picks
+        n <= min(remaining). Returns (sampled (n, n_slots) int32 matrix in
+        step order, measured_s)."""
+        n = int(max(1, min(n, DECODE_CHUNKS[-1])))
+        t0 = time.perf_counter()
+        n_steps = decode_chunk_bucket(n)
+        live_max = int(self.kv.lengths[emit_mask].max()) if emit_mask.any() \
+            else 0
+        if live_max + n > self.kv.max_ctx:
+            # the in-scan scatter would clamp at the last position while
+            # host lengths advance past the buffer — refuse loudly here so
+            # every caller gets the guarantee, not just EngineServer
+            raise RuntimeError(
+                f"decode_steps overflow: slot at length {live_max} cannot "
+                f"take {n} more tokens (max_ctx={self.kv.max_ctx})")
+        ctx_limit = ctx_bucket(live_max + n_steps, self.kv.max_ctx)
+        key = (n_steps, ctx_limit)
+        fn = self._fused.get(key)
+        if fn is None:
+            fn = self._fused[key] = self._build_fused(n_steps, ctx_limit)
+        caches, seq = fn(self.params, self.kv.caches,
+                         jnp.asarray(next_tokens, jnp.int32),
+                         jnp.asarray(self.kv.lengths),
+                         jnp.asarray(emit_mask), jnp.int32(n))
+        seq = np.asarray(jax.block_until_ready(seq))[:n]
+        self.kv.caches = caches  # donated: old buffers are dead
+        self.kv.lengths[emit_mask] += n
+        dt = time.perf_counter() - t0
+        self.compute_s += dt
+        self.n_decode_tokens += n * int(emit_mask.sum())
+        return seq, dt
+
     def decode_step_all(self, next_tokens: np.ndarray,
                         emit_mask: np.ndarray) -> Tuple[np.ndarray, float]:
-        """One continuous-batching iteration across ALL slots (inactive slots
-        compute in lockstep but are masked out). Returns (sampled (n_slots,),
-        measured_s)."""
+        """One continuous-batching iteration across ALL slots via the fused
+        in-place path. Returns (sampled (n_slots,), measured_s)."""
+        seq, dt = self.decode_steps(next_tokens, emit_mask, 1)
+        return seq[0], dt
+
+    def decode_step_all_reference(self, next_tokens: np.ndarray,
+                                  emit_mask: np.ndarray
+                                  ) -> Tuple[np.ndarray, float]:
+        """REFERENCE PATH (pre-fusion): one jitted dispatch + host sync +
+        host-side argmax per token, cache append via the copying
+        `append_step`. Kept as the parity oracle and benchmark baseline."""
         t0 = time.perf_counter()
         lens = self.kv.kv_lens()
         logits, updates = self._decode(

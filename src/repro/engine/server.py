@@ -25,7 +25,7 @@ from repro.core.metrics import ConversationRecord, TurnRecord
 from repro.core.scheduler import Scheduler
 from repro.core.signals import ClusterView, NodeState, PrefillLatencyCurve
 
-from .replica import ReplicaEngine
+from .replica import DECODE_CHUNKS, ReplicaEngine
 
 
 @dataclasses.dataclass
@@ -41,11 +41,26 @@ class _TurnTask:
 
 class EngineServer:
     def __init__(self, scheduler: Scheduler, replicas: List[ReplicaEngine],
-                 link_bw_bytes_s: float = 25e9, seed: int = 0):
+                 link_bw_bytes_s: float = 25e9, seed: int = 0,
+                 max_decode_chunk: int = 32, decode_mode: str = "fused",
+                 record_tokens: bool = False):
+        """decode_mode: "fused" runs up to `max_decode_chunk` tokens per
+        dispatch through the donated in-place scan (`decode_steps`);
+        "reference" replays the pre-fusion one-dispatch-per-token path
+        (kept for parity tests and before/after benchmarks).
+        record_tokens: keep every sampled token per (cid, turn) in
+        `sampled_tokens` — O(total output tokens) memory, tests only."""
+        assert decode_mode in ("fused", "reference")
         self.sched = scheduler
         self.replicas = {r.replica_id: r for r in replicas}
         self.link_bw = link_bw_bytes_s
-        self.rng = np.random.RandomState(seed)
+        # compiled scan buckets top out at DECODE_CHUNKS[-1]; a larger chunk
+        # would silently desync server token accounting from the replica
+        self.max_decode_chunk = max(1, min(int(max_decode_chunk),
+                                           DECODE_CHUNKS[-1]))
+        self.decode_mode = decode_mode
+        self.record_tokens = record_tokens
+        self.seed = seed
         states = {}
         for r in replicas:
             states[r.replica_id] = NodeState(
@@ -68,13 +83,24 @@ class EngineServer:
         self._seq = itertools.count()
         self.transfer_bytes = 0.0
         self.n_transfers = 0
+        # sampled token stream per (cid, turn_idx) when record_tokens is
+        # set — first token from the turn's prefill, then every decoded
+        # token in order (lets tests assert end-to-end token equality
+        # across decode modes)
+        self.sampled_tokens: Dict[Tuple[int, int], List[int]] = {}
 
     # ----- helpers ---------------------------------------------------------------
     def _turn_tokens(self, conv: Conversation, idx: int) -> np.ndarray:
+        # keyed per (cid, turn) so token content is independent of the ORDER
+        # turns are first reached — decode chunking / scheduling changes may
+        # reorder events, and token streams must stay comparable across runs
         key = (conv.cid, idx)
         if key not in self._tokens:
             vocab = next(iter(self.replicas.values())).cfg.vocab_size
-            self._tokens[key] = self.rng.randint(
+            rng = np.random.RandomState(
+                (self.seed * 1000003 + conv.cid * 9973 + idx * 7919)
+                % (2 ** 31))
+            self._tokens[key] = rng.randint(
                 0, vocab, size=conv.turns[idx].append_tokens).astype(np.int32)
         return self._tokens[key]
 
@@ -144,6 +170,8 @@ class EngineServer:
         task = _TurnTask(conv=conv, turn_idx=turn_idx, slot=slot,
                          remaining=conv.turns[turn_idx].output_tokens,
                          next_token=next_tok, arrival_t=arrival_t)
+        if self.record_tokens:
+            self.sampled_tokens[(conv.cid, turn_idx)] = [next_tok]
         q = self._decode_q[node_id]
         q.append(task)
         if len(q) == 1:
@@ -158,29 +186,58 @@ class EngineServer:
         n_slots = node.kv.n_slots
         next_tokens = np.zeros(n_slots, np.int32)
         emit = np.zeros(n_slots, bool)
-        by_slot = {}
         for task in q:
             next_tokens[task.slot] = task.next_token
             emit[task.slot] = True
-            by_slot[task.slot] = task
         start = max(self._now, self.clock[node_id])
-        sampled, dt = node.decode_step_all(next_tokens, emit)
+        room = node.kv.max_ctx - int(node.kv.lengths[emit].max())
+        if room <= 0:
+            # a silent overflow would drop the scattered KV write while
+            # host lengths keep advancing — fail loudly in BOTH modes
+            raise RuntimeError(
+                f"KV slot overflow on replica {node_id}: a decoding slot "
+                f"is at max_ctx={node.kv.max_ctx} with output remaining")
+
+        # one fused dispatch covers min(remaining) tokens (capped) — every
+        # active task consumes exactly n tokens, so no task overruns its turn
+        if self.decode_mode == "reference":
+            n = 1
+            sampled, dt = node.decode_step_all_reference(next_tokens, emit)
+            seq = sampled[None]
+        else:
+            n_max = min(min(t.remaining for t in q),
+                        self.max_decode_chunk, room)
+            # largest compiled bucket <= n_max: the scan then runs at exactly
+            # its compiled length, no masked no-op steps burning forwards
+            # (floor 1 covers zero-output turns — pre-PR decoded one there)
+            n = 1
+            for b in DECODE_CHUNKS:
+                if b <= n_max:
+                    n = b
+            seq, dt = node.decode_steps(next_tokens, emit, n)
         t_done = start + dt
+        per_tok = dt / n
         self.clock[node_id] = t_done
         st = self.states[node_id]
         ema = st.observed_tbt_ema_s
-        st.observed_tbt_ema_s = 0.9 * ema + 0.1 * dt if ema else dt
+        st.observed_tbt_ema_s = 0.9 * ema + 0.1 * per_tok if ema else per_tok
 
         finished = []
-        for slot, task in by_slot.items():
+        for task in q:
+            slot = task.slot
             if task.first_token_t is None:
-                task.first_token_t = t_done
-            task.remaining -= 1
-            task.next_token = int(sampled[slot])
-            st.active_kv_tokens += 1
+                # per-token timestamps interpolate the measured chunk time
+                task.first_token_t = start + per_tok
+            task.remaining -= n
+            task.next_token = int(seq[n - 1, slot])
+            if self.record_tokens:
+                self.sampled_tokens[(task.conv.cid, task.turn_idx)].extend(
+                    int(t) for t in seq[:n, slot])
+            st.active_kv_tokens += n
             if task.remaining <= 0:
                 finished.append(task)
-                q.remove(task)
+        # rebuild the queue once per iteration (not O(n) removes per finish)
+        self._decode_q[node_id] = q = [t for t in q if t.remaining > 0]
         for task in finished:
             self._finish_turn(task, t_done)
         if q:

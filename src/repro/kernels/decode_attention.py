@@ -4,7 +4,16 @@ KV cache; the kernel streams KV blocks HBM->VMEM with online-softmax
 accumulation, so HBM KV bandwidth is the only roofline term (matching §3.2's
 characterization). GQA is handled by blocking over KV heads: the G query
 heads sharing a KV head ride in one (G, D) tile against each (block_k, D)
-KV tile — an MXU-shaped matmul even at decode."""
+KV tile — an MXU-shaped matmul even at decode.
+
+Length trimming: the grid is a scalar-prefetch grid
+(`pltpu.PrefetchScalarGridSpec`) whose KV-block index map clamps the block
+index to each sequence's last *live* block — once `k_start >= valid_len`
+the map revisits the previous block, so Pallas's revisit-elision never
+issues the HBM->VMEM DMA for dead cache tail blocks. Callers that know a
+static upper bound on the live lengths pass `max_len` and the grid itself
+shrinks to `ceil(max_len / block_k)` KV steps.
+"""
 from __future__ import annotations
 
 import functools
@@ -58,37 +67,57 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
 
 
 def flash_decode_attention(q, k, v, lengths=None, *, block_k: int = 256,
+                           max_len: int | None = None,
                            interpret: bool = True):
     """q: (B, H, D); k,v: (B, S, Hkv, D); lengths: (B,) valid KV lengths
-    (None = all S valid). Returns (B, H, D)."""
+    (None = all S valid). `max_len` is an optional STATIC upper bound on
+    `lengths`; when given, the KV grid only spans ceil(max_len / block_k)
+    blocks instead of S / block_k. Returns (B, H, D)."""
     B, H, D = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     G = H // Hkv
     block_k = min(block_k, S)
     assert S % block_k == 0, "pad cache length to a block multiple"
     nk = S // block_k
+    if max_len is not None:
+        if lengths is None and max_len < S:
+            raise ValueError(
+                "max_len < S with lengths=None would silently truncate "
+                "attention to the first max_len positions; pass lengths")
+        nk = max(1, min(nk, -(-int(max_len) // block_k)))
     scale = 1.0 / math.sqrt(D)
     if lengths is None:
         lengths = jnp.full((B,), S, jnp.int32)
+    lengths = lengths.astype(jnp.int32)
     qg = q.reshape(B, Hkv, G, D)
 
+    def kv_block(b, n, ki, lens):
+        # clamp to the last live block: dead tail blocks revisit it, which
+        # Pallas elides — no HBM fetch past each sequence's valid length.
+        last_live = jnp.maximum(pl.cdiv(lens[b], block_k) - 1, 0)
+        return (b, jnp.minimum(ki, last_live), n, 0)
+
     kernel = functools.partial(_decode_kernel, block_k=block_k, scale=scale)
-    out = pl.pallas_call(
-        kernel,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # lengths ride in SMEM ahead of the grid
         grid=(B, Hkv, nk),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),  # lengths
-            pl.BlockSpec((1, 1, G, D), lambda b, n, ki: (b, n, 0, 0)),
-            pl.BlockSpec((1, block_k, 1, D), lambda b, n, ki: (b, ki, n, 0)),
-            pl.BlockSpec((1, block_k, 1, D), lambda b, n, ki: (b, ki, n, 0)),
+            pl.BlockSpec((1, 1, G, D), lambda b, n, ki, lens: (b, n, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, D), kv_block),
+            pl.BlockSpec((1, block_k, 1, D), kv_block),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, n, ki: (b, n, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, n, ki, lens: (b, n, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, D), jnp.float32),
         ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
         interpret=interpret,
     )(lengths, qg, k, v)
     return out.reshape(B, H, D)

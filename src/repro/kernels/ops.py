@@ -33,12 +33,22 @@ def prefill_attention(q, k, v, *, window: int = 0, impl: str = "pallas"):
     return out.transpose(0, 2, 1, 3)
 
 
-@partial(jax.jit, static_argnames=("impl",))
-def decode_attention(q, k, v, lengths=None, *, impl: str = "pallas"):
-    """q: (B,H,D); k,v: (B,S,Hkv,D); lengths: (B,). Flash-decode GQA."""
+@partial(jax.jit, static_argnames=("impl", "max_len"))
+def decode_attention(q, k, v, lengths=None, *, impl: str = "pallas",
+                     max_len: int | None = None):
+    """q: (B,H,D); k,v: (B,S,Hkv,D); lengths: (B,). Flash-decode GQA.
+    `max_len` (static) bounds the live lengths so the kernel grid only
+    spans the live KV prefix (dead tail blocks are never fetched)."""
+    if lengths is None and max_len is not None and max_len < k.shape[1]:
+        raise ValueError("max_len < S requires lengths (see "
+                         "flash_decode_attention)")
     if impl == "xla":
+        if max_len is not None:
+            s = min(k.shape[1], -(-int(max_len) // 128) * 128)
+            k, v = k[:, :s], v[:, :s]
         return ref.decode_attention_ref(q, k, v, lengths)
-    return flash_decode_attention(q, k, v, lengths, interpret=not _on_tpu())
+    return flash_decode_attention(q, k, v, lengths, max_len=max_len,
+                                  interpret=not _on_tpu())
 
 
 @partial(jax.jit, static_argnames=("impl", "chunk"))

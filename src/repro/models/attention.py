@@ -474,19 +474,30 @@ def gqa_prefill(params, cfg: ModelConfig, kind: str, x, start_pos: int,
     return out @ params["wo"], new_cache
 
 
+def _trim_ctx(leaf, ctx_limit: Optional[int]):
+    """Static slice of a growing cache leaf's length axis (axis 1) to the
+    caller-provided live-length upper bound — the decode tail then reads
+    only the live KV prefix instead of the whole max_ctx buffer."""
+    if ctx_limit is None or leaf.shape[1] <= ctx_limit:
+        return leaf
+    return leaf[:, :ctx_limit]
+
+
 def gqa_decode(params, cfg: ModelConfig, kind: str, x1, position,
-               cache: Dict, kv_lens=None):
+               cache: Dict, kv_lens=None, ctx_limit: Optional[int] = None):
     """x1: (B,1,D); cache: {"k","v"} (B,L,Hkv,hd); position scalar or (B,).
-    Returns (out, new_kv)."""
+    `ctx_limit` (static) is an upper bound on kv_lens: the cache read is
+    trimmed to it. Returns (out, new_kv)."""
     q, k, v = _proj_qkv(params, cfg, x1)
     theta = cfg.rope_theta if kind == ATTN_GLOBAL else getattr(
         cfg, "rope_theta_local", cfg.rope_theta)
     q = rope_single(q, position, theta)
     k = rope_single(k, position, theta)
     window = cfg.window if kind == ATTN_LOCAL else 0
-    out = decode_attention(q, dequantize_kv(cache["k"], cfg),
-                           dequantize_kv(cache["v"], cfg), k, v,
-                           kv_lens=kv_lens, window=window,
+    out = decode_attention(q,
+                           dequantize_kv(_trim_ctx(cache["k"], ctx_limit), cfg),
+                           dequantize_kv(_trim_ctx(cache["v"], ctx_limit), cfg),
+                           k, v, kv_lens=kv_lens, window=window,
                            pos=jnp.asarray(position))
     out = out.reshape(x1.shape[0], 1, cfg.n_heads * cfg.head_dim)
     return out @ params["wo"], {"k": quantize_kv(k, cfg),
@@ -557,7 +568,7 @@ def mla_prefill(params, cfg: ModelConfig, x, start_pos: int,
 
 
 def mla_decode(params, cfg: ModelConfig, x1, position, cache: Dict,
-               kv_lens=None):
+               kv_lens=None, ctx_limit: Optional[int] = None):
     """Absorbed-matrix MLA decode: score through the latent space directly;
     attention reads c_kv (rank) + k_rope (rope_dim) only."""
     B = x1.shape[0]
@@ -571,8 +582,9 @@ def mla_decode(params, cfg: ModelConfig, x1, position, cache: Dict,
     krope_n = rope_single(krope_n, position, cfg.rope_theta)
     new_cache = {"ckv": quantize_kv(ckv_n, cfg),
                  "krope": quantize_kv(krope_n, cfg)}
-    cache = {"ckv": dequantize_kv(cache["ckv"], cfg),
-             "krope": dequantize_kv(cache["krope"], cfg)}
+    cache = {"ckv": dequantize_kv(_trim_ctx(cache["ckv"], ctx_limit), cfg),
+             "krope": dequantize_kv(_trim_ctx(cache["krope"], ctx_limit),
+                                    cfg)}
 
     scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
     L = cache["ckv"].shape[1]

@@ -121,18 +121,21 @@ def block_prefill(params, cfg: ModelConfig, kind: str, x, start_pos,
 
 
 def block_decode(params, cfg: ModelConfig, kind: str, x1, position,
-                 cache: Dict, kv_lens=None) -> Tuple[jnp.ndarray, Dict]:
+                 cache: Dict, kv_lens=None,
+                 ctx_limit: Optional[int] = None) -> Tuple[jnp.ndarray, Dict]:
     """x1: (B,1,D). Returns (x_out, cache_updates): for attention kinds the
     new token's KV entries (engine appends); for recurrent kinds the updated
-    state."""
+    state. `ctx_limit` (static upper bound on kv_lens) trims attention cache
+    reads; recurrent state is fixed-size and unaffected."""
     h = apply_norm(params["ln1"], cfg, x1)
     updates: Dict[str, Any] = {}
     if kind == ATTN_MLA:
         out, cache_out = mla_decode(params["attn"], cfg, h, position, cache,
-                                    kv_lens=kv_lens)
+                                    kv_lens=kv_lens, ctx_limit=ctx_limit)
     elif kind in (ATTN_GLOBAL, ATTN_LOCAL):
         out, cache_out = gqa_decode(params["attn"], cfg, kind, h, position,
-                                    cache, kv_lens=kv_lens)
+                                    cache, kv_lens=kv_lens,
+                                    ctx_limit=ctx_limit)
     elif kind == RWKV6:
         out, cache_out = rwkv6_decode(params["tmix"], cfg, h,
                                       {"s": cache["s"], "shift": cache["shift"]})

@@ -76,14 +76,18 @@ class Model:
                                       prefix_start=prefix_start,
                                       logits_at=logits_at)
 
-    def decode_step(self, params, token, caches, position, kv_lens=None):
+    def decode_step(self, params, token, caches, position, kv_lens=None,
+                    ctx_limit=None):
         """(logits (B,V), cache_updates). Growing caches return the new
-        token's entries only; the cache manager appends (DESIGN.md §5)."""
+        token's entries only; the cache manager appends (DESIGN.md §5).
+        `ctx_limit` (static) is an upper bound on kv_lens: attention cache
+        reads are trimmed to it (decoder-only path; ignored for encdec)."""
         if self.cfg.is_encoder_decoder:
             return encdec.encdec_decode(params, self.cfg, token, caches,
                                         position, kv_lens=kv_lens)
         return transformer.lm_decode(params, self.cfg, token, caches,
-                                     position, kv_lens=kv_lens)
+                                     position, kv_lens=kv_lens,
+                                     ctx_limit=ctx_limit)
 
 
 GROWING_KEYS = ("k", "v", "ckv", "krope")

@@ -161,10 +161,11 @@ def lm_prefill(params, cfg: ModelConfig, tokens, *, caches=None,
 
 
 def lm_decode(params, cfg: ModelConfig, token, caches, position,
-              kv_lens=None):
+              kv_lens=None, ctx_limit=None):
     """One decode step. token: (B,) int32; caches as from lm_cache_skeleton.
     Returns (logits (B,V), cache_updates) — attention updates are the new
-    token's KV entries only (DESIGN.md §5)."""
+    token's KV entries only (DESIGN.md §5). `ctx_limit` (static int) is an
+    upper bound on kv_lens used to trim attention cache reads."""
     pat, n_groups, rem = cfg.pattern_groups()
     h = embed(params["embed"], cfg, token[:, None]).astype(cfg.jnp_dtype)
 
@@ -177,7 +178,8 @@ def lm_decode(params, cfg: ModelConfig, token, caches, position,
             for i, kind in enumerate(pat):
                 key = f"p{i}"
                 hh, up = block_decode(gparams[key], cfg, kind, hh, position,
-                                      gcache[key], kv_lens=kv_lens)
+                                      gcache[key], kv_lens=kv_lens,
+                                      ctx_limit=ctx_limit)
                 outs[key] = up
             return hh, outs
 
@@ -198,7 +200,8 @@ def lm_decode(params, cfg: ModelConfig, token, caches, position,
         for i, kind in enumerate(rem):
             key = f"p{i}"
             h, up = block_decode(params["rem"][key], cfg, kind, h, position,
-                                 caches["rem"][key], kv_lens=kv_lens)
+                                 caches["rem"][key], kv_lens=kv_lens,
+                                 ctx_limit=ctx_limit)
             rups[key] = up
         updates["rem"] = rups
     h = apply_norm(params["final_norm"], cfg, h)

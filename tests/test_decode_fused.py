@@ -1,0 +1,188 @@
+"""Decode-tail rebuild tests: the fused donated in-place decode step vs the
+retained `append_step` reference path, the multi-token scan loop, the
+length-trimmed flash-decode grid, ctx-trimmed model decode, and end-to-end
+EngineServer equivalence between decode modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import make_scheduler
+from repro.engine import EngineServer, ReplicaEngine
+from repro.kernels import ref
+from repro.kernels.decode_attention import flash_decode_attention
+from repro.models import build_model
+from repro.traces import TraceConfig, generate_trace
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prefill_two(cfg, params, n_slots=4, max_ctx=256):
+    eng = ReplicaEngine(cfg, params, n_slots=n_slots, max_ctx=max_ctx)
+    s0, s1 = eng.kv.acquire(), eng.kv.acquire()
+    t0, _ = eng.prefill_conversation(s0, np.arange(11, 48, dtype=np.int32))
+    t1, _ = eng.prefill_conversation(s1, np.arange(100, 111, dtype=np.int32))
+    nt = np.zeros(n_slots, np.int32)
+    em = np.zeros(n_slots, bool)
+    nt[s0], nt[s1] = int(t0), int(t1)
+    em[s0] = em[s1] = True
+    return eng, (s0, s1), nt, em
+
+
+# --------------------------------------------------------------------------- #
+# fused in-place decode vs the retained append_step reference path
+# --------------------------------------------------------------------------- #
+def test_fused_decode_matches_reference_tokens_and_cache(qwen):
+    cfg, model, params = qwen
+    ref_eng, (s0, s1), nt_r, em = _prefill_two(cfg, params)
+    fus_eng, _, nt_f, _ = _prefill_two(cfg, params)
+    np.testing.assert_array_equal(nt_r, nt_f)
+
+    ref_toks = {s0: [], s1: []}
+    for _ in range(6):
+        sampled, _ = ref_eng.decode_step_all_reference(nt_r, em)
+        for s in (s0, s1):
+            ref_toks[s].append(int(sampled[s]))
+            nt_r[s] = int(sampled[s])
+
+    seq, _ = fus_eng.decode_steps(nt_f, em, 6)
+    fus_toks = {s: [int(t) for t in seq[:, s]] for s in (s0, s1)}
+    assert fus_toks == ref_toks
+
+    # donated in-place scatter must leave byte-identical cache state
+    for a, b in zip(jax.tree_util.tree_leaves(ref_eng.kv.caches),
+                    jax.tree_util.tree_leaves(fus_eng.kv.caches)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+    np.testing.assert_array_equal(ref_eng.kv.lengths, fus_eng.kv.lengths)
+
+
+def test_multi_step_equals_repeated_single_step(qwen):
+    cfg, model, params = qwen
+    a, (s0, s1), nt_a, em = _prefill_two(cfg, params)
+    b, _, nt_b, _ = _prefill_two(cfg, params)
+
+    seq_multi, _ = a.decode_steps(nt_a, em, 5)
+    singles = []
+    for _ in range(5):
+        seq, _ = b.decode_steps(nt_b, em, 1)
+        singles.append(seq[0])
+        for s in (s0, s1):
+            nt_b[s] = int(seq[0, s])
+    for i in range(5):
+        for s in (s0, s1):
+            assert int(seq_multi[i, s]) == int(singles[i][s])
+
+
+def test_decode_chunk_does_not_advance_inactive_slots(qwen):
+    cfg, model, params = qwen
+    eng, (s0, s1), nt, em = _prefill_two(cfg, params)
+    em[s1] = False  # only s0 decodes
+    len1_before = int(eng.kv.lengths[s1])
+    cache_row = np.asarray(
+        jax.tree_util.tree_leaves(eng.kv.export_slot(s1)["caches"])[0])
+    eng.decode_steps(nt, em, 4)
+    assert int(eng.kv.lengths[s1]) == len1_before
+    cache_row_after = np.asarray(
+        jax.tree_util.tree_leaves(eng.kv.export_slot(s1)["caches"])[0])
+    np.testing.assert_array_equal(cache_row, cache_row_after)
+
+
+# --------------------------------------------------------------------------- #
+# length-trimmed flash-decode grid vs the jnp oracle
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("lens", [[5, 100, 37], [512, 1, 129], [64, 64, 64],
+                                  [512, 512, 512]])
+def test_trimmed_flash_decode_ragged(key, lens):
+    B, S, H, Hkv, D = 3, 512, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    lens_a = jnp.asarray(lens, jnp.int32)
+    want = ref.decode_attention_ref(q, k, v, lens_a)
+    got_full = flash_decode_attention(q, k, v, lens_a, block_k=128)
+    got_trim = flash_decode_attention(q, k, v, lens_a, block_k=128,
+                                      max_len=max(lens))
+    assert float(jnp.max(jnp.abs(got_full - want))) < 2e-5
+    assert float(jnp.max(jnp.abs(got_trim - want))) < 2e-5
+
+
+def test_trimmed_flash_decode_len_below_one_block(key):
+    """All lengths < block_k: the grid collapses to one KV block."""
+    B, S, H, Hkv, D = 2, 1024, 4, 1, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    lens_a = jnp.asarray([7, 130], jnp.int32)
+    want = ref.decode_attention_ref(q, k, v, lens_a)
+    got = flash_decode_attention(q, k, v, lens_a, block_k=256, max_len=130)
+    assert float(jnp.max(jnp.abs(got - want))) < 2e-5
+
+
+def test_ops_decode_attention_max_len_dispatch(key):
+    from repro.kernels import ops
+    B, S, H, Hkv, D = 2, 256, 4, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    lens = jnp.asarray([33, 200], jnp.int32)
+    a = ops.decode_attention(q, k, v, lens, impl="pallas", max_len=200)
+    b = ops.decode_attention(q, k, v, lens, impl="xla", max_len=200)
+    c = ops.decode_attention(q, k, v, lens, impl="xla")
+    assert float(jnp.max(jnp.abs(a - b))) < 2e-5
+    assert float(jnp.max(jnp.abs(b - c))) < 2e-5
+
+
+def test_model_decode_ctx_limit_matches_untrimmed(qwen):
+    """Trimming the cache read to a live-length bound must not change
+    logits (padding past kv_lens is fully masked either way)."""
+    cfg, model, params = qwen
+    eng, (s0, s1), nt, em = _prefill_two(cfg, params)
+    lens = jnp.asarray(eng.kv.lengths)
+    lg_full, _ = model.decode_step(params, jnp.asarray(nt), eng.kv.caches,
+                                   lens, kv_lens=lens)
+    lg_trim, _ = model.decode_step(params, jnp.asarray(nt), eng.kv.caches,
+                                   lens, kv_lens=lens, ctx_limit=64)
+    assert float(jnp.max(jnp.abs(lg_full - lg_trim))) < 1e-4
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end: fused chunked serving == reference single-step serving
+# --------------------------------------------------------------------------- #
+def test_server_fused_matches_reference_end_to_end(qwen):
+    cfg, model, params = qwen
+    tc = TraceConfig(first_input_median=50, first_input_sigma=0.3,
+                     first_input_max=120, append_median=14, append_sigma=0.4,
+                     append_max=32, output_median=6, output_sigma=0.5,
+                     output_max=10, mean_turns=2.0, max_turns=3,
+                     tool_mean_s=0.02)
+
+    def run(mode):
+        trace = generate_trace(4, 3.0, cfg=tc)
+        reps = [ReplicaEngine(cfg, params, n_slots=8, max_ctx=512,
+                              replica_id=0, role="prefill"),
+                ReplicaEngine(cfg, params, n_slots=8, max_ctx=512,
+                              replica_id=1)]
+        srv = EngineServer(make_scheduler("conserve"), reps,
+                           decode_mode=mode, record_tokens=True)
+        recs = srv.serve(trace)
+        return srv, recs
+
+    s_ref, r_ref = run("reference")
+    s_fus, r_fus = run("fused")
+    assert s_ref.sampled_tokens == s_fus.sampled_tokens
+    a = sorted((c.cid, t.turn_idx, t.n_output_tokens)
+               for c in r_ref for t in c.turns)
+    b = sorted((c.cid, t.turn_idx, t.n_output_tokens)
+               for c in r_fus for t in c.turns)
+    assert a == b

@@ -1,5 +1,9 @@
 """Hypothesis property tests on the system's scheduling invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
