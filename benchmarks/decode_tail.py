@@ -9,6 +9,15 @@ Measures decode tokens/s vs active-slot count and live KV length for
     dispatch per chunk, on-device sampling fed back, per-slot scatter fused
     into the jit program, cache reads trimmed to the live-context bucket.
 
+A second, staggered-finish scenario replays the agentic worst case — slots
+finishing 1-32 steps apart — under three policies:
+  * `reference`: one dispatch per token with a shrinking emit mask;
+  * `min_collapse`: the PR 1 server policy, every chunk capped at
+    min(remaining) over active slots (one nearly-finished turn collapses
+    the chunk for the whole batch);
+  * `ragged`: the current policy — chunks sized from max(remaining), each
+    slot consuming only its per-slot share and freezing mid-scan.
+
 Emits CSV rows through benchmarks.common and writes BENCH_decode_tail.json
 at the repo root so the perf trajectory is tracked PR over PR.
 
@@ -83,15 +92,81 @@ def _run_fused(eng, nt, em, n_tokens, chunk):
     return time.perf_counter() - t0
 
 
-def _measure(run, eng, nt, em, *args):
+# staggered-finish outputs: slots finishing 1-32 steps apart (the raggedness
+# the paper's agentic traces exhibit between turns of different tasks)
+STAGGERED_OUTPUTS = (1, 3, 6, 10, 14, 19, 25, 32)
+
+
+def _bucket_floor(n):
+    # the SAME floor the server uses — policy and replay stay locked
+    from repro.engine.replica import decode_chunk_floor
+    return decode_chunk_floor(n)
+
+
+def _run_reference_staggered(eng, nt, em, outputs):
+    """One dispatch per token; slots drop out of the emit mask as their
+    outputs complete."""
+    nt, left, active = nt.copy(), outputs.copy(), em.copy()
+    t0 = time.perf_counter()
+    while active.any():
+        sampled, _ = eng.decode_step_all_reference(nt, active)
+        for s in np.flatnonzero(active):
+            nt[s] = sampled[s]
+            left[s] -= 1
+            if left[s] <= 0:
+                active[s] = False
+    return time.perf_counter() - t0
+
+
+def _run_fused_min_collapse(eng, nt, em, outputs, chunk):
+    """PR 1 server policy: every chunk capped at min(remaining) over active
+    slots — the nearly-finished slot drags the whole batch back toward
+    single-step dispatches."""
+    nt, left, active = nt.copy(), outputs.copy(), em.copy()
+    t0 = time.perf_counter()
+    while active.any():
+        n = _bucket_floor(min(int(left[active].min()), chunk))
+        seq, _ = eng.decode_steps(nt, active, n)
+        for s in np.flatnonzero(active):
+            nt[s] = seq[n - 1, s]
+            left[s] -= n
+            if left[s] <= 0:
+                active[s] = False
+    return time.perf_counter() - t0
+
+
+def _run_fused_ragged(eng, nt, em, outputs, chunk):
+    """Current server policy: chunk sized from max(remaining)
+    (bucket-floored), each slot consuming only its own per-slot share and
+    freezing mid-scan once it is done."""
+    nt, left, active = nt.copy(), outputs.copy(), em.copy()
+    t0 = time.perf_counter()
+    while active.any():
+        n = _bucket_floor(min(int(left[active].max()), chunk))
+        rem = np.minimum(np.where(active, left, 0), n).astype(np.int32)
+        seq, _ = eng.decode_steps(nt, active, rem)
+        for s in np.flatnonzero(active):
+            took = int(rem[s])
+            nt[s] = seq[took - 1, s]
+            left[s] -= took
+            if left[s] <= 0:
+                active[s] = False
+    return time.perf_counter() - t0
+
+
+def _measure(run, eng, nt, em, *args, repeats: int = 1):
     """Warm along the exact length trajectory (compiles every chunk / ctx
     bucket the measured run will hit), then restore the KV snapshot and
-    time the steady state."""
+    time the steady state (best of `repeats` — policy comparisons use
+    best-of-N so scheduler jitter on shared CI runners does not swamp the
+    dispatch-count difference being measured)."""
     snap = _snapshot(eng)
     run(eng, nt, em, *args)          # warm-up pass: compile + execute
     _restore(eng, snap)
-    dt = run(eng, nt, em, *args)     # measured pass: steady state
-    _restore(eng, snap)
+    dt = float("inf")
+    for _ in range(max(1, repeats)):
+        dt = min(dt, run(eng, nt, em, *args))  # measured: steady state
+        _restore(eng, snap)
     return dt
 
 
@@ -110,6 +185,7 @@ def main(quick: bool = False):
     n_tokens = 32 if quick else 64
 
     points = []
+    compile_s = 0.0  # AOT compile seconds summed over EVERY engine built
     for n_active in slot_counts:
         for prompt_len in prompt_lens:
             eng, nt, em = _make_engine(cfg, params, n_slots, max_ctx,
@@ -123,14 +199,47 @@ def main(quick: bool = False):
                   "reference_tok_s": ref_tps, "fused_tok_s": fus_tps,
                   "speedup": fus_tps / ref_tps}
             points.append(pt)
+            compile_s += eng.compile_s
             emit(f"decode_tail_b{n_active}_l{prompt_len}",
                  ref_s / n_tokens * 1e6,
                  f"ref={ref_tps:.1f}tok/s;fused={fus_tps:.1f}tok/s;"
                  f"speedup={pt['speedup']:.2f}x")
 
+    # staggered-finish scenario: ragged per-slot chunks vs the old
+    # min-collapsed chunking vs the per-token reference (CI gates on
+    # ragged >= reference; the PR acceptance bar is ragged >= 2x
+    # min-collapse)
+    stag_chunk = 32  # the server's default max_decode_chunk
+    outs = np.zeros(n_slots, np.int32)
+    outs[: len(STAGGERED_OUTPUTS)] = STAGGERED_OUTPUTS
+    # short post-tool contexts: the memory-bound regime where dispatch
+    # overhead (what min-collapse multiplies) dominates the forward cost
+    eng, nt, em = _make_engine(cfg, params, n_slots, max_ctx,
+                               len(STAGGERED_OUTPUTS), 32)
+    total = int(outs.sum())
+    ref_s = _measure(_run_reference_staggered, eng, nt, em, outs,
+                     repeats=5)
+    mc_s = _measure(_run_fused_min_collapse, eng, nt, em, outs, stag_chunk,
+                    repeats=5)
+    rg_s = _measure(_run_fused_ragged, eng, nt, em, outs, stag_chunk,
+                    repeats=5)
+    staggered = {"outputs": list(STAGGERED_OUTPUTS), "chunk": stag_chunk,
+                 "total_tokens": total,
+                 "reference_tok_s": total / ref_s,
+                 "min_collapse_tok_s": total / mc_s,
+                 "ragged_tok_s": total / rg_s,
+                 "ragged_vs_min_collapse": mc_s / rg_s,
+                 "ragged_vs_reference": ref_s / rg_s}
+    emit("decode_tail_staggered", rg_s / total * 1e6,
+         f"ragged={total / rg_s:.1f}tok/s;min_collapse={total / mc_s:.1f}"
+         f"tok/s;ref={total / ref_s:.1f}tok/s;"
+         f"ragged_vs_min_collapse={mc_s / rg_s:.2f}x")
+
+    compile_s += eng.compile_s  # the staggered-scenario engine
     payload = {"model": "qwen3-0.6b(reduced)", "backend": jax.default_backend(),
                "n_slots": n_slots, "max_ctx": max_ctx, "quick": quick,
-               "points": points}
+               "points": points, "staggered": staggered,
+               "compile_s": round(compile_s, 3)}
     (BENCH_QUICK_PATH if quick else BENCH_PATH).write_text(
         json.dumps(payload, indent=1))
     return payload

@@ -46,6 +46,15 @@ def fold_decode_step(caches, updates, lens, mask, grouped, growing):
     buffers in place; `SlotKVCache.append_step` below keeps the original
     host-side copy path alive as the parity oracle.
 
+    ``mask`` is the per-step LIVE mask, not just slot activity: the ragged
+    scan passes ``emit & (step < remaining)``, so a slot whose per-slot
+    chunk share is exhausted mid-scan stops folding here — its cache row,
+    length, and fed-back token are all frozen from that step on while
+    longer-running neighbors keep appending. A masked-out slot's row must
+    be byte-identical afterwards (tests assert this), which is why every
+    branch is a select against the old leaf rather than an unconditional
+    write.
+
     caches/updates: pytrees; lens (n_slots,) int32 device array;
     mask (n_slots,) bool device array; grouped/growing: static bool trees.
     Returns the new caches pytree (same structure/shapes/dtypes)."""

@@ -4,14 +4,22 @@ Runs real forward passes on whatever devices are visible (CPU here; the same
 code paths pjit onto a mesh slice in production).
 
 Decode tail (the paper's memory-bound phase) is served by ONE jitted,
-buffer-donated program per (chunk, ctx) bucket: `jax.lax.scan` over up to
-`n` decode iterations with on-device greedy sampling fed back as the next
+buffer-donated program per (chunk, ctx) bucket: `jax.lax.scan` over the
+bucketed chunk length with on-device greedy sampling fed back as the next
 token and the per-slot cache scatter fused into the step
 (`fold_decode_step`), so XLA writes the donated KV buffers in place — no
 per-token full-cache copy, one dispatch + one host sync per chunk instead
-of per token. `decode_step_all_reference` keeps the original
-one-dispatch-per-token + host-side `append_step` copy path as the parity
-oracle and benchmark baseline."""
+of per token. The scan is RAGGED: `decode_steps` takes a per-slot
+`remaining` vector and each slot freezes (stops folding KV, stops
+advancing its length, stops consuming tokens) once its own count is
+exhausted, so a nearly-finished turn no longer collapses the chunk for
+the whole batch — the agentic-trace irregularity the paper's
+conversation-level view is meant to absorb. Fused programs are AOT
+compiled (`jax.jit(...).lower(...).compile()`): compile time accumulates
+in `compile_s` and never pollutes the measured per-chunk `dt` the server
+feeds its logical clock and TBT EMA. `decode_step_all_reference` keeps
+the original one-dispatch-per-token + host-side `append_step` copy path
+as the parity oracle and benchmark baseline."""
 from __future__ import annotations
 
 import time
@@ -49,6 +57,19 @@ def decode_chunk_bucket(n: int) -> int:
     return DECODE_CHUNKS[-1]
 
 
+def decode_chunk_floor(n: int) -> int:
+    """Largest compiled bucket <= n (floor 1): the chunk size a caller
+    should dispatch so the scan runs at exactly its compiled length with no
+    masked no-op tail. EngineServer._iterate and the decode_tail benchmark
+    both size chunks through this, so policy and replay stay locked
+    together."""
+    f = 1
+    for b in DECODE_CHUNKS:
+        if b <= n:
+            f = b
+    return f
+
+
 def ctx_bucket(n: int, max_ctx: int) -> int:
     """Power-of-two live-context bucket for the trimmed decode read."""
     b = CTX_BUCKET_MIN
@@ -59,7 +80,8 @@ def ctx_bucket(n: int, max_ctx: int) -> int:
 
 class ReplicaEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
-                 max_ctx: int = 2048, replica_id: int = 0, role: str = "decode"):
+                 max_ctx: int = 2048, replica_id: int = 0, role: str = "decode",
+                 warmup: bool = False):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -69,6 +91,7 @@ class ReplicaEngine:
         self.exact_prefill = any(k in ("rwkv6", "rglru")
                                  for k in cfg.block_pattern)
         self.compute_s = 0.0  # accumulated measured compute time
+        self.compile_s = 0.0  # fused decode AOT compile time (kept OUT of dt)
         self.n_prefill_tokens = 0
         self.n_decode_tokens = 0
 
@@ -77,6 +100,8 @@ class ReplicaEngine:
                 p, t, c, pos, kv_lens=lens))
         # fused donated decode programs, keyed by (scan length, ctx bucket)
         self._fused: Dict[Tuple[int, int], Any] = {}
+        if warmup:
+            self.warmup_decode()
 
     # ----- sampling -------------------------------------------------------------
     def sample(self, logits) -> np.ndarray:
@@ -132,17 +157,20 @@ class ReplicaEngine:
 
     # ----- decode -----------------------------------------------------------------
     def _build_fused(self, n_steps: int, ctx_limit: Optional[int]):
-        """Jitted fused decode program: scan over `n_steps` iterations with
+        """Fused decode program: scan over `n_steps` iterations with
         on-device greedy sampling fed back as the next token and the
         per-slot cache scatter fused into the step. The cache pytree is
         DONATED — XLA aliases the input buffers into the outputs, so the
         decode tail appends in place instead of copying every leaf per
-        token. Steps with index >= n_live are masked no-ops (lets one
-        compiled bucket serve any chunk size up to n_steps)."""
+        token. The scan is ragged: `remaining` is a per-slot step count and
+        slot s is a masked no-op from step remaining[s] on (its KV stops
+        folding, its length stops advancing, its fed-back token freezes),
+        so one compiled bucket serves any mix of per-slot chunk lengths up
+        to n_steps."""
         grouped, growing = self.kv._grouped, self.kv._growing
         vocab = self.cfg.vocab_size
 
-        def run(params, caches, tokens, lens, emit, n_live):
+        def run(params, caches, tokens, lens, emit, remaining):
             def body(carry, i):
                 caches, lens, tokens = carry
                 logits, updates = self.model.decode_step(
@@ -150,7 +178,7 @@ class ReplicaEngine:
                     ctx_limit=ctx_limit)
                 sampled = jnp.argmax(logits[:, :vocab], axis=-1).astype(
                     jnp.int32)
-                live = emit & (i < n_live)
+                live = emit & (i < remaining)
                 caches = fold_decode_step(caches, updates, lens, live,
                                           grouped, growing)
                 lens = lens + live.astype(lens.dtype)
@@ -163,40 +191,126 @@ class ReplicaEngine:
 
         return jax.jit(run, donate_argnums=(1,))
 
-    def decode_steps(self, next_tokens: np.ndarray, emit_mask: np.ndarray,
-                     n: int) -> Tuple[np.ndarray, float]:
-        """Run up to `n` fused decode iterations across ALL slots in ONE
-        dispatch (inactive slots compute in lockstep but are masked out).
-        Every emitting slot consumes exactly `n` tokens — the caller picks
-        n <= min(remaining). Returns (sampled (n, n_slots) int32 matrix in
-        step order, measured_s)."""
-        n = int(max(1, min(n, DECODE_CHUNKS[-1])))
-        t0 = time.perf_counter()
-        n_steps = decode_chunk_bucket(n)
-        live_max = int(self.kv.lengths[emit_mask].max()) if emit_mask.any() \
-            else 0
-        if live_max + n > self.kv.max_ctx:
+    def _get_fused(self, n_steps: int, ctx_limit: int):
+        """Fetch (or AOT-compile) the fused program for one (chunk, ctx)
+        bucket. Compile time goes to `self.compile_s`, NOT into any
+        measured decode dt — first bucket hits no longer pollute the
+        server's logical clock or the observed TBT EMA."""
+        key = (n_steps, ctx_limit)
+        fn = self._fused.get(key)
+        if fn is None:
+            t0 = time.perf_counter()
+            spec = lambda x: jax.ShapeDtypeStruct(  # noqa: E731
+                jnp.shape(x), x.dtype)
+            vec = lambda dt: jax.ShapeDtypeStruct(  # noqa: E731
+                (self.kv.n_slots,), dt)
+            fn = self._build_fused(n_steps, ctx_limit).lower(
+                jax.tree_util.tree_map(spec, self.params),
+                jax.tree_util.tree_map(spec, self.kv.caches),
+                vec(jnp.int32), vec(jnp.int32), vec(jnp.bool_),
+                vec(jnp.int32)).compile()
+            self.compile_s += time.perf_counter() - t0
+            self._fused[key] = fn
+        return fn
+
+    def warmup_decode(self, chunks=None, ctx_limits=None) -> float:
+        """Pre-compile fused decode programs so serving never hits a cold
+        (chunk, ctx) bucket. Defaults cover every bucket reachable on this
+        replica: all DECODE_CHUNKS × all power-of-two ctx buckets up to
+        max_ctx. Returns the seconds spent compiling (also accumulated in
+        `self.compile_s`)."""
+        if ctx_limits is None:
+            ctx_limits = []
+            b = CTX_BUCKET_MIN
+            while b < self.kv.max_ctx:
+                ctx_limits.append(b)
+                b *= 2
+            ctx_limits.append(self.kv.max_ctx)
+        before = self.compile_s
+        for c in (chunks if chunks is not None else DECODE_CHUNKS):
+            for cl in dict.fromkeys(int(x) for x in ctx_limits):
+                self._get_fused(decode_chunk_bucket(int(c)), cl)
+        return self.compile_s - before
+
+    def _remaining_vector(self, emit_mask: np.ndarray,
+                          remaining) -> np.ndarray:
+        """Normalize `remaining` (scalar or per-slot vector) into a
+        validated per-slot int32 vector, enforcing the per-slot overflow
+        guard (raises naming the offending slot, not the batch max)."""
+        if np.ndim(remaining) == 0:
+            n = int(max(1, min(int(remaining), DECODE_CHUNKS[-1])))
+            rem = np.where(emit_mask, n, 0).astype(np.int32)
+        else:
+            rem = np.asarray(remaining, np.int32).copy()
+            if rem.shape != emit_mask.shape:
+                raise ValueError(
+                    f"decode_steps: remaining shape {rem.shape} != "
+                    f"emit_mask shape {emit_mask.shape}")
+            rem[~emit_mask] = 0
+            bad = emit_mask & (rem <= 0)
+            if bad.any():
+                raise ValueError(
+                    "decode_steps: emitting slot(s) "
+                    f"{np.flatnonzero(bad).tolist()} have non-positive "
+                    "remaining")
+            big = emit_mask & (rem > DECODE_CHUNKS[-1])
+            if big.any():
+                # the contract is 'slot s consumes EXACTLY remaining[s]
+                # tokens' — silently clamping would desync the caller's
+                # bookkeeping from kv.lengths, so refuse instead
+                s = int(np.flatnonzero(big)[0])
+                raise ValueError(
+                    f"decode_steps: slot {s} remaining {int(rem[s])} "
+                    f"exceeds the largest compiled chunk "
+                    f"{DECODE_CHUNKS[-1]}; chunk the call")
+        over = emit_mask & (self.kv.lengths + rem > self.kv.max_ctx)
+        if over.any():
+            s = int(np.flatnonzero(over)[0])
             # the in-scan scatter would clamp at the last position while
             # host lengths advance past the buffer — refuse loudly here so
             # every caller gets the guarantee, not just EngineServer
             raise RuntimeError(
-                f"decode_steps overflow: slot at length {live_max} cannot "
-                f"take {n} more tokens (max_ctx={self.kv.max_ctx})")
+                f"decode_steps overflow: slot {s} at length "
+                f"{int(self.kv.lengths[s])} cannot take {int(rem[s])} more "
+                f"tokens (max_ctx={self.kv.max_ctx})")
+        return rem
+
+    def decode_steps(self, next_tokens: np.ndarray, emit_mask: np.ndarray,
+                     remaining) -> Tuple[np.ndarray, float]:
+        """Run one RAGGED fused decode chunk across ALL slots in ONE
+        dispatch (inactive slots compute in lockstep but are masked out).
+
+        `remaining` is either a scalar int — every emitting slot consumes
+        exactly that many tokens (clamped into [1, DECODE_CHUNKS[-1]], the
+        historic contract) — or a per-slot int vector: slot s consumes
+        exactly remaining[s] tokens (each must be in [1, DECODE_CHUNKS[-1]];
+        larger values raise rather than silently clamp), then freezes
+        mid-scan while longer-running neighbors continue to
+        max(remaining). Returns
+        (sampled (max(remaining), n_slots) int32 matrix in step order —
+        rows >= remaining[s] are dead for slot s — and measured execution
+        seconds; AOT compile time is charged to `self.compile_s`, never to
+        the returned dt)."""
+        emit_mask = np.asarray(emit_mask, bool)
+        rem = self._remaining_vector(emit_mask, remaining)
+        n_max = int(rem.max()) if emit_mask.any() else 1
+        n_max = max(1, n_max)
+        n_steps = decode_chunk_bucket(n_max)
+        live_max = int(self.kv.lengths[emit_mask].max()) if emit_mask.any() \
+            else 0
         ctx_limit = ctx_bucket(live_max + n_steps, self.kv.max_ctx)
-        key = (n_steps, ctx_limit)
-        fn = self._fused.get(key)
-        if fn is None:
-            fn = self._fused[key] = self._build_fused(n_steps, ctx_limit)
+        fn = self._get_fused(n_steps, ctx_limit)
+        t0 = time.perf_counter()
         caches, seq = fn(self.params, self.kv.caches,
                          jnp.asarray(next_tokens, jnp.int32),
                          jnp.asarray(self.kv.lengths),
-                         jnp.asarray(emit_mask), jnp.int32(n))
-        seq = np.asarray(jax.block_until_ready(seq))[:n]
+                         jnp.asarray(emit_mask), jnp.asarray(rem))
+        seq = np.asarray(jax.block_until_ready(seq))[:n_max]
         self.kv.caches = caches  # donated: old buffers are dead
-        self.kv.lengths[emit_mask] += n
+        self.kv.lengths += np.where(emit_mask, rem, 0).astype(np.int32)
         dt = time.perf_counter() - t0
         self.compute_s += dt
-        self.n_decode_tokens += n * int(emit_mask.sum())
+        self.n_decode_tokens += int(rem[emit_mask].sum())
         return seq, dt
 
     def decode_step_all(self, next_tokens: np.ndarray,

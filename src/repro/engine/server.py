@@ -25,7 +25,7 @@ from repro.core.metrics import ConversationRecord, TurnRecord
 from repro.core.scheduler import Scheduler
 from repro.core.signals import ClusterView, NodeState, PrefillLatencyCurve
 
-from .replica import DECODE_CHUNKS, ReplicaEngine
+from .replica import DECODE_CHUNKS, ReplicaEngine, decode_chunk_floor
 
 
 @dataclasses.dataclass
@@ -45,9 +45,12 @@ class EngineServer:
                  max_decode_chunk: int = 32, decode_mode: str = "fused",
                  record_tokens: bool = False):
         """decode_mode: "fused" runs up to `max_decode_chunk` tokens per
-        dispatch through the donated in-place scan (`decode_steps`);
-        "reference" replays the pre-fusion one-dispatch-per-token path
-        (kept for parity tests and before/after benchmarks).
+        dispatch through the donated in-place RAGGED scan (`decode_steps`):
+        the chunk is sized from the longest remaining turn, each slot
+        consumes only its own per-slot share, and turns that exhaust their
+        output mid-chunk finish at interpolated timestamps. "reference"
+        replays the pre-fusion one-dispatch-per-token path (kept for parity
+        tests and before/after benchmarks).
         record_tokens: keep every sampled token per (cid, turn) in
         `sampled_tokens` — O(total output tokens) memory, tests only."""
         assert decode_mode in ("fused", "reference")
@@ -186,35 +189,40 @@ class EngineServer:
         n_slots = node.kv.n_slots
         next_tokens = np.zeros(n_slots, np.int32)
         emit = np.zeros(n_slots, bool)
+        rem = np.zeros(n_slots, np.int32)
         for task in q:
-            next_tokens[task.slot] = task.next_token
-            emit[task.slot] = True
+            s = task.slot
+            next_tokens[s] = task.next_token
+            emit[s] = True
+            # per-slot room: each slot's chunk share is clamped to ITS OWN
+            # headroom — one long-context neighbor no longer shrinks (or
+            # falsely trips) the whole batch's chunk
+            room = node.kv.max_ctx - int(node.kv.lengths[s])
+            if room <= 0:
+                # a silent overflow would drop the scattered KV write while
+                # host lengths keep advancing — fail loudly in BOTH modes
+                raise RuntimeError(
+                    f"KV slot overflow on replica {node_id}: slot {s} "
+                    f"(cid {task.conv.cid}) is at max_ctx={node.kv.max_ctx} "
+                    f"with {task.remaining} output tokens remaining")
+            # floor 1 covers zero-output turns — pre-PR decoded one there
+            rem[s] = max(1, min(task.remaining, self.max_decode_chunk, room))
         start = max(self._now, self.clock[node_id])
-        room = node.kv.max_ctx - int(node.kv.lengths[emit].max())
-        if room <= 0:
-            # a silent overflow would drop the scattered KV write while
-            # host lengths keep advancing — fail loudly in BOTH modes
-            raise RuntimeError(
-                f"KV slot overflow on replica {node_id}: a decoding slot "
-                f"is at max_ctx={node.kv.max_ctx} with output remaining")
 
-        # one fused dispatch covers min(remaining) tokens (capped) — every
-        # active task consumes exactly n tokens, so no task overruns its turn
         if self.decode_mode == "reference":
             n = 1
+            rem = np.minimum(rem, 1)
             sampled, dt = node.decode_step_all_reference(next_tokens, emit)
             seq = sampled[None]
         else:
-            n_max = min(min(t.remaining for t in q),
-                        self.max_decode_chunk, room)
-            # largest compiled bucket <= n_max: the scan then runs at exactly
-            # its compiled length, no masked no-op steps burning forwards
-            # (floor 1 covers zero-output turns — pre-PR decoded one there)
-            n = 1
-            for b in DECODE_CHUNKS:
-                if b <= n_max:
-                    n = b
-            seq, dt = node.decode_steps(next_tokens, emit, n)
+            # ragged chunk, sized from the LONGEST remaining task (largest
+            # compiled bucket <= max(remaining) so the scan runs at exactly
+            # its compiled length): a nearly-finished slot freezes mid-scan
+            # while its neighbors run on, instead of collapsing the chunk
+            # to min(remaining) for the whole batch
+            n = decode_chunk_floor(int(rem[emit].max()))
+            rem = np.minimum(rem, n)
+            seq, dt = node.decode_steps(next_tokens, emit, rem)
         t_done = start + dt
         per_tok = dt / n
         self.clock[node_id] = t_done
@@ -222,24 +230,31 @@ class EngineServer:
         ema = st.observed_tbt_ema_s
         st.observed_tbt_ema_s = 0.9 * ema + 0.1 * per_tok if ema else per_tok
 
-        finished = []
         for task in q:
             slot = task.slot
+            took = int(rem[slot])
             if task.first_token_t is None:
                 # per-token timestamps interpolate the measured chunk time
                 task.first_token_t = start + per_tok
-            task.remaining -= n
-            task.next_token = int(seq[n - 1, slot])
+            task.remaining -= took
+            task.next_token = int(seq[took - 1, slot])
             if self.record_tokens:
                 self.sampled_tokens[(task.conv.cid, task.turn_idx)].extend(
-                    int(t) for t in seq[:n, slot])
-            st.active_kv_tokens += n
+                    int(t) for t in seq[:took, slot])
+            st.active_kv_tokens += took
             if task.remaining <= 0:
-                finished.append(task)
-        # rebuild the queue once per iteration (not O(n) removes per finish)
+                # mid-chunk finish: this turn's last token landed at step
+                # `took`, not at the chunk boundary — emit the finish event
+                # at its interpolated timestamp so tool time (and the next
+                # turn's prefill) starts there instead of waiting for the
+                # batch's longest slot
+                t_fin = start + took * per_tok
+                self._push(t_fin, lambda task=task, t=t_fin:
+                           self._finish_turn(task, t))
+        # rebuild the queue once per iteration (not O(n) removes per finish);
+        # newly-ready turns admitted by _begin_decode join at the next chunk
+        # boundary
         self._decode_q[node_id] = q = [t for t in q if t.remaining > 0]
-        for task in finished:
-            self._finish_turn(task, t_done)
         if q:
             self._push(t_done, lambda: self._iterate(node_id))
 

@@ -1,7 +1,8 @@
 """Decode-tail rebuild tests: the fused donated in-place decode step vs the
-retained `append_step` reference path, the multi-token scan loop, the
-length-trimmed flash-decode grid, ctx-trimmed model decode, and end-to-end
-EngineServer equivalence between decode modes."""
+retained `append_step` reference path, the multi-token RAGGED scan loop
+(per-slot remaining, mid-chunk freezes), the length-trimmed flash-decode
+grid, ctx-trimmed model decode, and end-to-end EngineServer equivalence
+between decode modes including staggered-finish agentic traces."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +10,7 @@ import pytest
 
 from repro.configs import get_reduced
 from repro.core import make_scheduler
+from repro.core.conversation import Conversation, Turn
 from repro.engine import EngineServer, ReplicaEngine
 from repro.kernels import ref
 from repro.kernels.decode_attention import flash_decode_attention
@@ -93,6 +95,114 @@ def test_decode_chunk_does_not_advance_inactive_slots(qwen):
     cache_row_after = np.asarray(
         jax.tree_util.tree_leaves(eng.kv.export_slot(s1)["caches"])[0])
     np.testing.assert_array_equal(cache_row, cache_row_after)
+
+
+# --------------------------------------------------------------------------- #
+# ragged per-slot chunks: mid-scan freezes, overflow guard, warmup
+# --------------------------------------------------------------------------- #
+def test_ragged_chunk_matches_per_token_reference_replay(qwen):
+    """decode_steps with a per-slot remaining vector must be token- and
+    cache-exact against the per-token reference path replayed with the
+    same shrinking live mask (slot freezes at step remaining[s])."""
+    cfg, model, params = qwen
+    fus, (s0, s1), nt_f, em = _prefill_two(cfg, params)
+    ref_eng, _, nt_r, _ = _prefill_two(cfg, params)
+
+    rem = np.zeros(fus.kv.n_slots, np.int32)
+    rem[s0], rem[s1] = 3, 7
+    seq, _ = fus.decode_steps(nt_f, em, rem)
+    assert seq.shape[0] == 7  # rows = max(remaining), not the 8-bucket
+
+    ref_toks = {s0: [], s1: []}
+    for i in range(7):
+        mask = em & (i < rem)
+        sampled, _ = ref_eng.decode_step_all_reference(nt_r, mask)
+        for s in np.flatnonzero(mask):
+            ref_toks[s].append(int(sampled[s]))
+            nt_r[s] = int(sampled[s])
+    fus_toks = {s: [int(t) for t in seq[: rem[s], s]] for s in (s0, s1)}
+    assert fus_toks == ref_toks
+
+    # the short slot advanced by exactly its own remaining, and its cache
+    # row is byte-identical to the reference replay's
+    np.testing.assert_array_equal(fus.kv.lengths, ref_eng.kv.lengths)
+    for a, b in zip(jax.tree_util.tree_leaves(fus.kv.caches),
+                    jax.tree_util.tree_leaves(ref_eng.kv.caches)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+
+
+def test_ragged_chunk_equals_scalar_when_uniform(qwen):
+    """A uniform remaining vector must reproduce the scalar-n contract."""
+    cfg, model, params = qwen
+    a, (s0, s1), nt_a, em = _prefill_two(cfg, params)
+    b, _, nt_b, _ = _prefill_two(cfg, params)
+    rem = np.where(em, 5, 0).astype(np.int32)
+    seq_v, _ = a.decode_steps(nt_a, em, rem)
+    seq_s, _ = b.decode_steps(nt_b, em, 5)
+    np.testing.assert_array_equal(seq_v[:, [s0, s1]], seq_s[:, [s0, s1]])
+    np.testing.assert_array_equal(a.kv.lengths, b.kv.lengths)
+
+
+def test_decode_steps_overflow_names_offending_slot(qwen):
+    """The per-slot overflow guard must name the slot that would overflow,
+    not just report the batch max."""
+    cfg, model, params = qwen
+    eng, (s0, s1), nt, em = _prefill_two(cfg, params, max_ctx=64)
+    eng.kv.lengths[s1] = 62  # 2 tokens of room left
+    rem = np.zeros(eng.kv.n_slots, np.int32)
+    rem[s0], rem[s1] = 4, 4
+    with pytest.raises(RuntimeError, match=rf"slot {s1} at length 62"):
+        eng.decode_steps(nt, em, rem)
+    # the same call is fine once clamped to the slot's room
+    rem[s1] = 2
+    eng.decode_steps(nt, em, rem)
+
+
+def test_decode_steps_rejects_nonpositive_remaining_on_emitting_slot(qwen):
+    cfg, model, params = qwen
+    eng, (s0, s1), nt, em = _prefill_two(cfg, params)
+    rem = np.zeros(eng.kv.n_slots, np.int32)
+    rem[s0] = 3  # s1 emits but has remaining 0
+    with pytest.raises(ValueError, match=rf"slot\(s\) \[{s1}\]"):
+        eng.decode_steps(nt, em, rem)
+
+
+def test_decode_steps_rejects_over_bucket_remaining(qwen):
+    """A per-slot remaining above the largest compiled chunk must raise —
+    silently clamping would desync the caller's bookkeeping from
+    kv.lengths (the scalar path keeps its historic clamp)."""
+    cfg, model, params = qwen
+    eng, (s0, s1), nt, em = _prefill_two(cfg, params)
+    rem = np.zeros(eng.kv.n_slots, np.int32)
+    rem[s0], rem[s1] = 3, 40
+    with pytest.raises(ValueError, match=rf"slot {s1} remaining 40"):
+        eng.decode_steps(nt, em, rem)
+
+
+def test_warmup_precompiles_and_separates_compile_time(qwen):
+    """warmup_decode pre-builds (chunk, ctx) buckets; compile time lands in
+    compile_s and never in the measured decode dt."""
+    cfg, model, params = qwen
+    eng = ReplicaEngine(cfg, params, n_slots=4, max_ctx=128)
+    spent = eng.warmup_decode(chunks=(1, 4), ctx_limits=(64,))
+    assert spent > 0
+    assert (1, 64) in eng._fused and (4, 64) in eng._fused
+    assert eng.compile_s == pytest.approx(spent)
+
+    s0 = eng.kv.acquire()
+    t0, _ = eng.prefill_conversation(s0, np.arange(7, 30, dtype=np.int32))
+    nt = np.zeros(4, np.int32)
+    em = np.zeros(4, bool)
+    nt[s0], em[s0] = int(t0), True
+    before = eng.compile_s
+    _, dt = eng.decode_steps(nt, em, 4)  # hits the pre-warmed (4, 64) bucket
+    assert eng.compile_s == before  # no compile charged on a warm bucket
+    # a cold bucket compiles into compile_s, and the reported dt stays in
+    # the same regime as the warm call (compile is NOT in dt)
+    _, dt_cold = eng.decode_steps(nt, em, 2)
+    assert eng.compile_s > before
+    assert dt_cold < 100 * max(dt, 1e-4)
 
 
 # --------------------------------------------------------------------------- #
@@ -186,3 +296,57 @@ def test_server_fused_matches_reference_end_to_end(qwen):
     b = sorted((c.cid, t.turn_idx, t.n_output_tokens)
                for c in r_fus for t in c.turns)
     assert a == b
+
+
+def _staggered_trace():
+    """Four conversations arriving together whose outputs finish 2-20 steps
+    apart — the worst case for min-collapsed chunking: slot 0 used to drag
+    every chunk down to its tiny remaining.
+
+    All arrivals are at t=0.0 exactly, so every conversation prefills
+    (event push order) before the first decode chunk regardless of how
+    warm the jit caches are — the queue composition, and hence each
+    dispatch's ctx bucket, is identical on every run and in both decode
+    modes. Context sizes are chosen to stay inside ONE ctx bucket
+    (max length + max chunk < 64) so the trimmed-read width never flips
+    with interleaving."""
+    outs = (2, 5, 9, 20)
+    convs = []
+    for i, o in enumerate(outs):
+        turns = [Turn(append_tokens=8 + 2 * i, output_tokens=o,
+                      tool_time_s=0.0)]
+        if i == 1:  # one multi-turn conv exercises chunk-boundary admission
+            turns.append(Turn(append_tokens=10, output_tokens=6,
+                              tool_time_s=0.0))
+        convs.append(Conversation(cid=i, arrival_s=0.0, turns=turns))
+    return convs
+
+
+def test_server_staggered_finish_fused_matches_reference(qwen):
+    """Short-output agentic trace with staggered finishes: ragged fused
+    serving must produce byte-identical per-(cid, turn) token streams and
+    turn records vs decode_mode="reference"."""
+    cfg, model, params = qwen
+
+    def run(mode):
+        rep = ReplicaEngine(cfg, params, n_slots=8, max_ctx=256,
+                            replica_id=0, role="mixed")
+        srv = EngineServer(make_scheduler("conserve"), [rep],
+                           decode_mode=mode, record_tokens=True)
+        recs = srv.serve(_staggered_trace())
+        return srv, {c.cid: c for c in recs}
+
+    s_ref, r_ref = run("reference")
+    s_fus, r_fus = run("fused")
+    assert s_ref.sampled_tokens == s_fus.sampled_tokens
+    assert sorted(r_ref) == sorted(r_fus)
+    for cid in r_ref:
+        a = [(t.turn_idx, t.n_output_tokens) for t in r_ref[cid].turns]
+        b = [(t.turn_idx, t.n_output_tokens) for t in r_fus[cid].turns]
+        assert a == b
+
+    # mid-chunk finishes: on the fused run all four turn-0s decode in one
+    # ragged chunk, so their last-token timestamps must interpolate in
+    # output order instead of all landing on the chunk boundary
+    fin = [r_fus[cid].turns[0].last_token_s for cid in range(4)]
+    assert fin[0] < fin[1] < fin[2] < fin[3]

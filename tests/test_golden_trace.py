@@ -1,0 +1,101 @@
+"""Golden-trace regression test for the serving loop.
+
+Serves one fixed-seed agentic trace on a single collocated replica and
+compares the resulting turn-record summary — per-turn token counts, the
+GLOBAL finish ordering, and conversation pinning — against a checked-in
+golden file. Scheduling or chunking refactors that silently reorder
+finishes, drop turns, or un-pin conversations fail here even when every
+per-turn parity test still passes.
+
+The setup is chosen so the event order is fully deterministic despite the
+engine measuring real wall time: ONE mixed-role replica (a single logical
+clock serializes prefill and decode), zero tool latency, and arrivals
+packed at the trace head (all conversations prefill before the first
+decode chunk). Finish order within a chunk is then decided by per-slot
+step counts alone, never by timing noise — nothing in the summary depends
+on float timings or sampled token CONTENT, so the golden file is stable
+across platforms and jax versions.
+
+Regenerate after an INTENTIONAL contract change with:
+  REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_golden_trace.py
+and commit the diff (it IS the reviewable behavior change).
+"""
+import json
+import os
+from pathlib import Path
+
+import jax
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import make_scheduler
+from repro.engine import EngineServer, ReplicaEngine
+from repro.models import build_model
+from repro.traces import TraceConfig, generate_trace
+
+GOLDEN = Path(__file__).parent / "golden" / "decode_golden_trace.json"
+
+TRACE = TraceConfig(seed=7, first_input_median=40, first_input_sigma=0.3,
+                    first_input_max=80, append_median=10, append_sigma=0.3,
+                    append_max=20, output_median=6, output_sigma=0.8,
+                    output_max=20, mean_turns=2.0, max_turns=3,
+                    tool_mean_s=0.0)
+
+
+def _serve_summary():
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rep = ReplicaEngine(cfg, params, n_slots=8, max_ctx=256,
+                        replica_id=0, role="mixed")
+    srv = EngineServer(make_scheduler("conserve"), [rep],
+                       decode_mode="fused", record_tokens=True)
+
+    finish_order = []
+    orig_finish = srv._finish_turn
+
+    def spy(task, t):
+        finish_order.append([task.conv.cid, task.turn_idx])
+        return orig_finish(task, t)
+
+    srv._finish_turn = spy
+    # arrivals packed at the head (1ns apart): no prefill can finish
+    # faster, so every conversation joins the decode queue before the
+    # first chunk runs no matter how warm the jit caches are
+    trace = generate_trace(5, 1e9, cfg=TRACE, arrival_process="saturation")
+    recs = {r.cid: r for r in srv.serve(trace)}
+
+    return {
+        "finish_order": finish_order,
+        "conversations": {
+            str(cid): {
+                "turn_output_tokens": [t.n_output_tokens
+                                       for t in recs[cid].turns],
+                "turn_order": [t.turn_idx for t in recs[cid].turns],
+                # pinning: collocated ConServe must never move KV
+                "n_kv_transfers": recs[cid].n_kv_transfers,
+                "n_remote_turns": recs[cid].n_remote_turns,
+            } for cid in sorted(recs)
+        },
+        # sampled_tokens includes the prefill token, so counts are
+        # output_tokens + 1 per (cid, turn) — a length check that is
+        # independent of model numerics
+        "stream_lengths": {f"{cid}:{turn}": len(toks) for (cid, turn), toks
+                           in sorted(srv.sampled_tokens.items())},
+    }
+
+
+def test_golden_trace_summary_matches():
+    summary = _serve_summary()
+    if os.environ.get("REGEN_GOLDEN"):
+        GOLDEN.parent.mkdir(exist_ok=True)
+        GOLDEN.write_text(json.dumps(summary, indent=1) + "\n")
+        pytest.skip(f"regenerated {GOLDEN}")
+    assert GOLDEN.exists(), (
+        f"golden file missing: run REGEN_GOLDEN=1 pytest {__file__} "
+        "and commit tests/golden/decode_golden_trace.json")
+    golden = json.loads(GOLDEN.read_text())
+    assert summary == golden, (
+        "serving summary diverged from the golden trace — if this change "
+        "is intentional, regenerate with REGEN_GOLDEN=1 and commit the "
+        "golden diff")

@@ -106,6 +106,92 @@ def test_simulator_conservation_and_one_transfer(seed, n_convs):
         assert not node.decode_jobs
 
 
+# --------------------------------------------------------------------------- #
+# ragged fused decode chunks vs the per-token reference path (real engine)
+# --------------------------------------------------------------------------- #
+ENGINE_SET = settings(max_examples=8, deadline=None,
+                      suppress_health_check=[HealthCheck.too_slow])
+
+
+@pytest.fixture(scope="module")
+def ragged_pair():
+    """Two identical prefilled replicas (fused / reference) plus KV
+    snapshots so every hypothesis example starts from the same state —
+    decode_steps donates its cache buffers, so each example restores fresh
+    copies instead of re-prefilling."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_reduced
+    from repro.engine import ReplicaEngine
+    from repro.models import build_model
+
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def make():
+        eng = ReplicaEngine(cfg, params, n_slots=4, max_ctx=128)
+        s0, s1 = eng.kv.acquire(), eng.kv.acquire()
+        t0, _ = eng.prefill_conversation(s0,
+                                         np.arange(11, 48, dtype=np.int32))
+        t1, _ = eng.prefill_conversation(s1,
+                                         np.arange(100, 111, dtype=np.int32))
+        nt = np.zeros(4, np.int32)
+        nt[s0], nt[s1] = int(t0), int(t1)
+        return eng, nt
+
+    fus, nt = make()
+    ref, nt2 = make()
+    np.testing.assert_array_equal(nt, nt2)
+
+    def snap(eng):
+        return (jax.tree_util.tree_map(jnp.array, eng.kv.caches),
+                eng.kv.lengths.copy())
+
+    def restore(eng, s):
+        eng.kv.caches = jax.tree_util.tree_map(jnp.array, s[0])
+        eng.kv.lengths = s[1].copy()
+
+    return fus, ref, (snap(fus), snap(ref)), restore, nt
+
+
+@ENGINE_SET
+@given(st.tuples(st.integers(0, 6), st.integers(0, 6)).filter(
+    lambda r: any(r)))
+def test_ragged_decode_chunk_token_and_cache_exact(ragged_pair, rems):
+    """PROPERTY: for ANY per-slot remaining vector, one ragged fused chunk
+    is token-exact and cache-exact against the per-token reference path
+    replayed with the same shrinking live mask (a slot with remaining r
+    freezes from step r on; remaining 0 means the slot sits out)."""
+    import jax
+    fus, ref, (snap_f, snap_r), restore, nt0 = ragged_pair
+    restore(fus, snap_f)
+    restore(ref, snap_r)
+
+    rem = np.zeros(4, np.int32)
+    rem[0], rem[1] = rems
+    emit = rem > 0
+    seq, _ = fus.decode_steps(nt0.copy(), emit, rem)
+    assert seq.shape[0] == int(rem.max())
+
+    nt = nt0.copy()
+    ref_toks = {s: [] for s in np.flatnonzero(emit)}
+    for i in range(int(rem.max())):
+        mask = emit & (i < rem)
+        sampled, _ = ref.decode_step_all_reference(nt, mask)
+        for s in np.flatnonzero(mask):
+            ref_toks[s].append(int(sampled[s]))
+            nt[s] = int(sampled[s])
+
+    for s in np.flatnonzero(emit):
+        assert [int(t) for t in seq[: rem[s], s]] == ref_toks[s]
+    np.testing.assert_array_equal(fus.kv.lengths, ref.kv.lengths)
+    for a, b in zip(jax.tree_util.tree_leaves(fus.kv.caches),
+                    jax.tree_util.tree_leaves(ref.kv.caches)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+
+
 @SET
 @given(st.integers(0, 2**31 - 1))
 def test_turn_records_monotone(seed):
