@@ -348,7 +348,15 @@ def decode_tail_bench():
     decode_tail.main(quick=True)
 
 
+def serve_overload_bench():
+    """Saturated serving through admission backpressure on both backends
+    (writes BENCH_serve_overload.json at the repo root)."""
+    from . import serve_overload
+    serve_overload.main(quick=True)
+
+
 ALL = [fig01_trace_dist, fig02_prefill_curve, fig03_kv_transfer,
        fig04_tbt_heatmap, fig05_collocation, fig06_tbt_variance,
        fig07_powercap_prefill, fig08_powercap_decode, fig10_agentic_perf,
-       fig11_cdfs, fig12_wrong_prediction, fig13_hetero, decode_tail_bench]
+       fig11_cdfs, fig12_wrong_prediction, fig13_hetero, decode_tail_bench,
+       serve_overload_bench]

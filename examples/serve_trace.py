@@ -37,8 +37,9 @@ def main():
           f"{'E2E g (s)':>11}{'tok/J':>8}{'xfer/conv':>11}")
     for system in ("conserve", "ampd", "collocated", "full_disagg"):
         sim = paper_deployment(system, wrong_prediction_rate=args.wrong)
-        sim.submit(trace).run()
-        s = summarize(sim.results(), energy_joules=sim.total_energy_j(),
+        # the shared Runtime contract (same call drives the real engine)
+        recs = sim.serve(trace)
+        s = summarize(recs, energy_joules=sim.total_energy_j(),
                       total_tokens=total)
         print(f"{system:<13}{s['ttfet_gmean']:>9.1f}/{s['ttfet_p95']:>9.1f}"
               f"{s['last_tbt_gmean']*1e3:>14.1f}{s['e2e_gmean']:>11.1f}"

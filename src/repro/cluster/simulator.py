@@ -29,10 +29,18 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.conversation import Conversation, TurnView, view_of
 from repro.core.metrics import ConversationRecord, TurnRecord
+from repro.core.runtime import (Admission, AdmissionQueue, DECODING, DONE,
+                                PREFILLING, Runtime, ServeSession, TOOL_WAIT,
+                                TRANSFERRING)
 from repro.core.scheduler import Scheduler
 from repro.core.signals import ClusterView, NodeState
 
 from .hardware import NodeCostModel
+
+# Simulated nodes are KV-headroom-limited by default; a finite slot count is
+# opt-in (SimNode.n_slots) because slot exhaustion is an engine-level
+# artifact the cost model has no analogue for unless declared.
+UNBOUNDED_SLOTS = 1 << 30
 
 
 # --------------------------------------------------------------------------- #
@@ -68,6 +76,7 @@ class SimNode:
     node_id: int
     role: str                          # "prefill" | "decode" | "mixed"
     cost: NodeCostModel
+    n_slots: Optional[int] = None      # finite KV slot count (None=unbounded)
     state: NodeState = None
     prefill_q: List[PrefillJob] = dataclasses.field(default_factory=list)
     decode_jobs: Dict[int, DecodeJob] = dataclasses.field(default_factory=dict)
@@ -89,7 +98,7 @@ class SimNode:
 # --------------------------------------------------------------------------- #
 # Simulator
 # --------------------------------------------------------------------------- #
-class ClusterSimulator:
+class ClusterSimulator(Runtime):
     def __init__(self, scheduler: Scheduler, nodes: List[SimNode],
                  chunk_tokens: int = 8192, decoder_chunk_tokens: int = 2944,
                  track_token_times: bool = False):
@@ -98,7 +107,8 @@ class ClusterSimulator:
         for n in nodes:
             cap = n.cost.kv_capacity_tokens()
             n.state = NodeState(node_id=n.node_id, role=n.role,
-                                kv_capacity_tokens=cap)
+                                kv_capacity_tokens=cap,
+                                slot_capacity=n.n_slots or UNBOUNDED_SLOTS)
         self.chunk_tokens = chunk_tokens
         self.decoder_chunk_tokens = decoder_chunk_tokens
         self.track_token_times = track_token_times
@@ -109,6 +119,9 @@ class ClusterSimulator:
         self._seq = itertools.count()
         self.now = 0.0
         self.records: Dict[int, ConversationRecord] = {}
+        self.sessions: Dict[int, ServeSession] = {}
+        self._admission: Dict[int, AdmissionQueue] = {
+            n.node_id: AdmissionQueue(n.node_id) for n in nodes}
         self._convs: Dict[int, Conversation] = {}
         self._bound: Dict[int, int] = {}
         self._turn_recs: Dict[int, List[TurnRecord]] = {}
@@ -116,6 +129,26 @@ class ClusterSimulator:
         self.n_kv_transfers = 0
         self.bind_counts: Dict[int, int] = {}
         self.log: List[str] = []
+
+    # ----- admission (Runtime contract) ----------------------------------------
+    def _can_admit(self, node_id: int, adm: Admission) -> bool:
+        """Ground truth for the cost-model backend: the node is alive, has a
+        free KV slot (finite only when declared) and enough token headroom
+        for the work's context. Work that can never fit fails loudly."""
+        st = self.nodes[node_id].state
+        if adm.need_tokens > st.kv_capacity_tokens:
+            raise RuntimeError(
+                f"conversation {adm.cid} needs {adm.need_tokens} KV tokens "
+                f"but node {node_id} holds {st.kv_capacity_tokens}; no "
+                f"amount of queueing can admit it")
+        return (st.alive and st.free_slots > 0
+                and st.kv_headroom_tokens >= adm.need_tokens)
+
+    def _reserve(self, st: NodeState, need_tokens: int):
+        """Admitted work holds its slot + token reservation until the KV
+        actually lands (_start_turn turn 0 converts reserved -> active)."""
+        st.used_slots += 1
+        st.reserved_kv_tokens += need_tokens
 
     # ----- event plumbing ------------------------------------------------------
     def at(self, t: float, fn: Callable):
@@ -138,6 +171,7 @@ class ClusterSimulator:
         for c in convs:
             self._convs[c.cid] = c
             self.records[c.cid] = ConversationRecord(c.cid, c.arrival_s)
+            self._make_session(c.cid, c.arrival_s)
             self._turn_recs[c.cid] = []
             self.at(c.arrival_s, lambda c=c: self._on_arrival(c))
         return self
@@ -146,7 +180,26 @@ class ClusterSimulator:
     def _on_arrival(self, conv: Conversation):
         pl = self.sched.place_first_prefill(view_of(conv), self.view)
         node = self.nodes[pl.node_id]
+        if node.role == "mixed":
+            # collocated: the conversation RESIDES on the mixed node from its
+            # first prefill chunk on, so arrival itself passes admission
+            self._offer(pl.node_id,
+                        Admission(conv.cid, conv.first_input_len,
+                                  lambda nid, conv=conv:
+                                  self._admit_arrival(conv, nid),
+                                  kind="arrival"),
+                        self.now)
+            return
+        # dedicated prefiller: jobs stream through a FIFO without holding
+        # long-term KV residency; backpressure applies at the decoder bind
+        self._admit_arrival(conv, pl.node_id)
+
+    def _admit_arrival(self, conv: Conversation, node_id: int):
+        node = self.nodes[node_id]
         mixed = node.node_id if node.role == "mixed" else None
+        if mixed is not None:
+            self._reserve(node.state, conv.first_input_len)
+        self.sessions[conv.cid].transition(PREFILLING, self.now)
         job = PrefillJob(
             cid=conv.cid, turn_idx=0, n_tokens=conv.first_input_len,
             context_tokens=conv.first_input_len, enqueued_s=self.now,
@@ -198,16 +251,32 @@ class ClusterSimulator:
             self.at(t, lambda: self._start_turn(conv, 0, mixed_node,
                                                 arrival_t=conv.arrival_s))
             return
+        # the one-shot KV binding passes admission on the chosen decoder:
+        # when it is full (no slot / headroom for this context) the binding
+        # parks in the decoder's admission queue and is re-offered as
+        # conversations end — backpressure, not silent overcommit
         pl = self.sched.bind_decoder(view_of(conv), self.view)
-        dec = self.nodes[pl.node_id]
-        self._bound[conv.cid] = pl.node_id
-        self.bind_counts[pl.node_id] = self.bind_counts.get(pl.node_id, 0) + 1
-        self.records[conv.cid].n_kv_transfers += int(pl.kv_transfer)
+        self._offer(pl.node_id,
+                    Admission(conv.cid, conv.first_input_len,
+                              lambda nid, conv=conv, t=t,
+                              kv=pl.kv_transfer:
+                              self._bind(conv, nid, max(t, self.now), kv)),
+                    t)
+
+    def _bind(self, conv: Conversation, node_id: int, t: float,
+              kv_transfer: bool):
+        dec = self.nodes[node_id]
+        self._reserve(dec.state, conv.first_input_len)
+        self._bound[conv.cid] = node_id
+        self.sessions[conv.cid].node_id = node_id
+        self.bind_counts[node_id] = self.bind_counts.get(node_id, 0) + 1
+        self.records[conv.cid].n_kv_transfers += int(kv_transfer)
         delay = 0.0
-        if pl.kv_transfer:
+        if kv_transfer:
+            self.sessions[conv.cid].transition(TRANSFERRING, t)
             delay = self._transfer(conv.first_input_len, dec)
         self.at(t + delay, lambda: self._start_turn(
-            conv, 0, pl.node_id, arrival_t=conv.arrival_s))
+            conv, 0, node_id, arrival_t=conv.arrival_s))
 
     def _transfer(self, n_tokens: int, node: SimNode) -> float:
         self.n_kv_transfers += 1
@@ -230,6 +299,10 @@ class ClusterSimulator:
         if turn_idx == 0:
             node.state.active_kv_tokens += conv.first_input_len
             node.state.active_conversations += 1
+            # admission reservation becomes live KV
+            node.state.reserved_kv_tokens = max(
+                0, node.state.reserved_kv_tokens - conv.first_input_len)
+        self.sessions[conv.cid].transition(DECODING, self.now, force=True)
         dj = DecodeJob(cid=conv.cid, turn_idx=turn_idx,
                        remaining_prefill=0 if prefilled else turn.append_tokens,
                        remaining_decode=turn.output_tokens,
@@ -250,6 +323,8 @@ class ClusterSimulator:
         self._turn_recs[conv.cid].append(rec)
         node.state.active_kv_tokens += turn.output_tokens
         if dj.turn_idx + 1 < conv.n_turns:
+            self.sessions[conv.cid].transition(TOOL_WAIT, self.now)
+            self.sessions[conv.cid].turn_idx = dj.turn_idx + 1
             self.at(self.now + turn.tool_time_s,
                     lambda: self._on_turn_arrival(conv, dj.turn_idx + 1))
         else:
@@ -258,9 +333,13 @@ class ClusterSimulator:
     def _finish_conversation(self, conv: Conversation, node: SimNode):
         rec = self.records[conv.cid]
         rec.turns = self._turn_recs[conv.cid]
+        self.sessions[conv.cid].transition(DONE, self.now, force=True)
         node.state.active_kv_tokens -= conv.peak_context_tokens()
         node.state.active_conversations -= 1
+        node.state.used_slots = max(0, node.state.used_slots - 1)
         self.sched.on_conversation_end(conv.cid, self.view)
+        # occupancy freed: re-offer parked admissions (backpressure)
+        self._pump(node.node_id, self.now)
 
     def _on_turn_arrival(self, conv: Conversation, turn_idx: int):
         bound = self._bound[conv.cid]
@@ -280,10 +359,13 @@ class ClusterSimulator:
             # local append-prefill, chunked into the decoder's iterations
             node = self.nodes[bound]
             node.state.active_kv_tokens += turn.append_tokens
+            self.sessions[conv.cid].transition(PREFILLING, self.now)
             self._start_turn(conv, turn_idx, bound, prefilled=False)
             return
         # remote turn prefill (AMPD wrong prediction / FullDisagg)
         self.records[conv.cid].n_remote_turns += 1
+        if pl.kv_transfer:
+            self.sessions[conv.cid].transition(TRANSFERRING, self.now)
         pf = self.nodes[pl.node_id]
         dec = self.nodes[bound]
         dec.state.active_kv_tokens += turn.append_tokens
@@ -298,6 +380,7 @@ class ClusterSimulator:
         extra = 0.0 if full_recompute else t_out + t_back
 
         def enqueue():
+            self.sessions[conv.cid].transition(PREFILLING, self.now)
             job = PrefillJob(
                 cid=conv.cid, turn_idx=turn_idx, n_tokens=n_new,
                 context_tokens=ctx + turn.append_tokens, enqueued_s=self.now,
@@ -401,9 +484,21 @@ class ClusterSimulator:
         node.decode_jobs.clear()
         node.state.active_kv_tokens = 0
         node.state.active_conversations = 0
+        node.state.used_slots = 0
+        node.state.reserved_kv_tokens = 0
         self.log.append(f"t={self.now:.1f} node {node_id} FAILED; "
                         f"recovering {len(victims)} in-flight conversations "
                         f"by replay (tool-waiting ones recover lazily)")
+        # work parked in the dead node's admission queue will never be
+        # pumped — re-place each waiting admission on a healthy node through
+        # the SAME scheduler decision point that placed it originally
+        for adm in self._admission[node_id].drain():
+            node.state.queued_conversations -= 1
+            cv = view_of(self._convs[adm.cid])
+            pl = (self.sched.place_first_prefill(cv, self.view)
+                  if adm.kind == "arrival"
+                  else self.sched.bind_decoder(cv, self.view))
+            self._offer(pl.node_id, adm, self.now)
         for cid in victims:
             conv = self._convs[cid]
             done_turns = len(self._turn_recs[cid])
@@ -414,6 +509,7 @@ class ClusterSimulator:
         prefiller, rebind to a healthy decoder (exactly ConServe's one-shot
         mechanism), then resume the interrupted/pending turn."""
         self.records[conv.cid].recovered = True
+        self.sessions[conv.cid].transition(PREFILLING, self.now, force=True)
         ctx = sum(t.append_tokens + t.output_tokens
                   for t in conv.turns[:turn_idx]) \
             + conv.turns[turn_idx].append_tokens
@@ -424,10 +520,12 @@ class ClusterSimulator:
             pl2 = self.sched.bind_decoder(view_of(conv), self.view)
             dec2 = self.nodes[pl2.node_id]
             self._bound[conv.cid] = pl2.node_id
+            self.sessions[conv.cid].node_id = pl2.node_id
             self.bind_counts[pl2.node_id] = \
                 self.bind_counts.get(pl2.node_id, 0) + 1
             dec2.state.active_kv_tokens += ctx
             dec2.state.active_conversations += 1
+            dec2.state.used_slots += 1
             delay = self._transfer(ctx, dec2) if pl2.kv_transfer else 0.0
             self.at(t + delay,
                     lambda: self._resume_turn(conv, turn_idx, pl2.node_id))
@@ -440,6 +538,7 @@ class ClusterSimulator:
     def _resume_turn(self, conv: Conversation, turn_idx: int, node_id: int):
         node = self.nodes[node_id]
         turn = conv.turns[turn_idx]
+        self.sessions[conv.cid].transition(DECODING, self.now, force=True)
         dj = DecodeJob(cid=conv.cid, turn_idx=turn_idx, remaining_prefill=0,
                        remaining_decode=turn.output_tokens,
                        context_tokens=sum(
@@ -449,15 +548,18 @@ class ClusterSimulator:
         node.decode_jobs[(conv.cid << 8) + turn_idx] = dj
         self._kick_iteration(node)
 
-    def add_decoder(self, cost: NodeCostModel) -> int:
+    def add_decoder(self, cost: NodeCostModel,
+                    n_slots: Optional[int] = None) -> int:
         nid = max(self.nodes) + 1
         node = SimNode(node_id=nid, role="decode", cost=cost,
-                       last_energy_t=self.now)
+                       n_slots=n_slots, last_energy_t=self.now)
         cap = cost.kv_capacity_tokens()
         node.state = NodeState(node_id=nid, role="decode",
-                               kv_capacity_tokens=cap)
+                               kv_capacity_tokens=cap,
+                               slot_capacity=n_slots or UNBOUNDED_SLOTS)
         self.nodes[nid] = node
         self.view._nodes[nid] = node.state
+        self._admission[nid] = AdmissionQueue(nid)
         self.log.append(f"t={self.now:.1f} scaled out: decoder {nid}")
         return nid
 

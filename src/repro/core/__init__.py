@@ -3,6 +3,9 @@ from .scheduler import Placement, Scheduler, SCHEDULERS, make_scheduler
 from .conserve import ConServeScheduler
 from .baselines import AMPDScheduler, CollocatedScheduler, FullDisaggScheduler
 from .signals import ClusterView, NodeState, PrefillLatencyCurve
+from .runtime import (Admission, AdmissionQueue, Runtime, ServeSession,
+                      SESSION_STATES, QUEUED, PREFILLING, TRANSFERRING,
+                      DECODING, TOOL_WAIT, DONE)
 from .provisioning import (NodeRates, WorkloadStats, min_decoders,
                            paper_configuration, prefiller_saturation_rate,
                            provision, slots_per_decoder)

@@ -1,0 +1,244 @@
+"""The conversation-session runtime contract shared by BOTH serving backends
+(the discrete-event `ClusterSimulator` and the real-JAX `EngineServer`).
+
+The paper's claim is that conversation-level scheduling makes placement a
+pure function of observable state. For that to be true BY CONTRACT rather
+than by convention, both backends must present the scheduler with the same
+lifecycle, the same observables, and the same overload behavior. This module
+defines that contract:
+
+* `ServeSession` — the per-conversation state machine
+  (QUEUED -> PREFILLING -> TRANSFERRING -> DECODING -> TOOL_WAIT -> DONE)
+  with per-state timestamps, so queue wait, transfer stall and tool time are
+  measurable observations, not modeled guesses.
+* `Runtime` — the serving protocol (`submit` / `run` / `results`, plus the
+  admission plumbing) every backend implements; `serve()` composes them.
+* Admission control with backpressure: when a target node has no free KV
+  slot or insufficient headroom, the work (a conversation arrival, a
+  one-shot KV binding, a remote-turn package) waits in that node's
+  `AdmissionQueue` and is re-offered when occupancy frees — instead of
+  crashing (the engine's old `"no free KV slots"`) or silently overcommitting
+  (the simulator's old unbounded growth). Queue depth is an observable
+  (`NodeState.queued_conversations`); schedulers may read it but never a
+  prediction of when it will drain.
+
+Schedulers stay pure policies over `ClusterView`: the only new decision
+point is `Scheduler.reoffer_admission`, called when a node frees capacity
+with work waiting — the default (None) admits in FIFO order, so ConServe
+and the baselines run unmodified.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+# ----- session states --------------------------------------------------------
+QUEUED = "QUEUED"              # submitted / waiting for admission
+PREFILLING = "PREFILLING"      # (append-)prefill running or enqueued
+TRANSFERRING = "TRANSFERRING"  # KV moving between nodes
+DECODING = "DECODING"          # decode tail active on the bound node
+TOOL_WAIT = "TOOL_WAIT"        # tool call in flight; KV stays pinned
+DONE = "DONE"                  # final turn's last token emitted
+
+SESSION_STATES = (QUEUED, PREFILLING, TRANSFERRING, DECODING, TOOL_WAIT, DONE)
+
+# Legal transitions. QUEUED is re-enterable from every live state: any stage
+# that needs capacity on a full node parks there until occupancy frees.
+_ALLOWED: Dict[str, Tuple[str, ...]] = {
+    QUEUED: (PREFILLING, TRANSFERRING, DECODING),
+    PREFILLING: (TRANSFERRING, DECODING, QUEUED),
+    TRANSFERRING: (PREFILLING, DECODING, QUEUED),
+    DECODING: (TOOL_WAIT, DONE),
+    TOOL_WAIT: (PREFILLING, TRANSFERRING, DECODING, QUEUED),
+    DONE: (),
+}
+
+
+@dataclasses.dataclass
+class ServeSession:
+    """Observable lifecycle of one conversation inside a runtime.
+
+    `history` is the full (state, entered_at) trail; timestamps come from the
+    runtime's logical clock, so per-state dwell times (queue wait, transfer
+    stall, tool time) are measurements of things that already happened."""
+    cid: int
+    arrival_s: float
+    state: str = QUEUED
+    node_id: Optional[int] = None  # current binding (decoder residency)
+    turn_idx: int = 0
+    history: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.history:
+            self.history.append((self.state, self.arrival_s))
+
+    def transition(self, state: str, t: float, *, force: bool = False):
+        """Enter `state` at time `t`. Raises on an illegal transition unless
+        `force` (failure recovery legitimately rewinds a session)."""
+        if state == self.state:
+            return
+        if not force and state not in _ALLOWED[self.state]:
+            raise RuntimeError(
+                f"illegal session transition for cid {self.cid}: "
+                f"{self.state} -> {state} (allowed: "
+                f"{', '.join(_ALLOWED[self.state]) or 'none'})")
+        self.state = state
+        self.history.append((state, t))
+
+    def time_in(self, state: str, now: Optional[float] = None) -> float:
+        """Total seconds spent in `state` over the session's closed history
+        segments (plus the open segment up to `now`, when given)."""
+        total = 0.0
+        for (s, t0), (_, t1) in zip(self.history, self.history[1:]):
+            if s == state:
+                total += t1 - t0
+        if self.history and self.history[-1][0] == state and now is not None:
+            total += max(now - self.history[-1][1], 0.0)
+        return total
+
+    @property
+    def queue_wait_s(self) -> float:
+        """Accumulated admission wait — the backpressure signal overload
+        benchmarks record."""
+        return self.time_in(QUEUED)
+
+    @property
+    def done(self) -> bool:
+        return self.state == DONE
+
+
+# ----- admission -------------------------------------------------------------
+@dataclasses.dataclass
+class Admission:
+    """One unit of work waiting for capacity on a node: a conversation
+    arrival, a one-shot KV binding, or a remote-turn package. `ready` is
+    invoked with the ADMITTING node id (the scheduler's re-offer hook may
+    move a parked admission to a different node before it runs). `kind`
+    records which scheduler decision point placed the work, so a runtime
+    that must re-place a parked admission (e.g. its node died) asks the
+    same decision point again."""
+    cid: int
+    need_tokens: int           # KV tokens the work lands with (headroom ask)
+    ready: Callable[[int], None]
+    kind: str = "bind"         # "arrival" | "bind" | "turn"
+
+
+class AdmissionQueue:
+    """Per-node FIFO of admissions waiting for a free KV slot / headroom."""
+
+    def __init__(self, node_id: int):
+        self.node_id = node_id
+        self._q: Deque[Admission] = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def head(self) -> Admission:
+        return self._q[0]
+
+    def push(self, adm: Admission):
+        self._q.append(adm)
+
+    def pop(self) -> Admission:
+        return self._q.popleft()
+
+    def drain(self) -> List[Admission]:
+        out = list(self._q)
+        self._q.clear()
+        return out
+
+
+class Runtime(abc.ABC):
+    """Serving contract both backends implement. Subclasses provide:
+
+    * `sched` (a `Scheduler`), `view` (a `ClusterView`),
+    * `sessions: Dict[int, ServeSession]`,
+    * `_admission: Dict[int, AdmissionQueue]` (one per node),
+    * `_can_admit(node_id, adm)` — the backend's ground-truth capacity check
+      (engine: a free KV slot; simulator: a free slot AND token headroom).
+
+    The base class owns the admission/backpressure mechanism so overload
+    behaves identically at both scales; schedulers only ever see the
+    observable consequences (queue depth, occupancy) through `ClusterView`.
+    """
+
+    sessions: Dict[int, ServeSession]
+    _admission: Dict[int, "AdmissionQueue"]
+    # how many admissions were ever deferred (parked) — a structural
+    # backpressure signal independent of measured wall time
+    n_deferred_admissions: int = 0
+
+    # ----- protocol ----------------------------------------------------------
+    @abc.abstractmethod
+    def submit(self, convs) -> "Runtime":
+        """Register conversations (records + sessions) and schedule their
+        arrival events. Returns self for chaining."""
+
+    @abc.abstractmethod
+    def run(self) -> "Runtime":
+        """Drain the event loop. Returns self for chaining."""
+
+    @abc.abstractmethod
+    def results(self) -> list:
+        """Completed `ConversationRecord`s."""
+
+    def serve(self, convs) -> list:
+        """The one-call contract: submit + run + results."""
+        return self.submit(convs).run().results()
+
+    # ----- admission mechanism ----------------------------------------------
+    @abc.abstractmethod
+    def _can_admit(self, node_id: int, adm: Admission) -> bool:
+        ...
+
+    def _make_session(self, cid: int, arrival_s: float) -> ServeSession:
+        sess = ServeSession(cid=cid, arrival_s=arrival_s)
+        self.sessions[cid] = sess
+        return sess
+
+    def _offer(self, node_id: int, adm: Admission, now: float) -> bool:
+        """Admit `adm` on `node_id` immediately if it has capacity and no one
+        is already waiting (FIFO fairness); otherwise park it in the node's
+        admission queue and flip the session to QUEUED. Returns True when the
+        work ran now."""
+        q = self._admission[node_id]
+        # evaluate capacity even when others are waiting: _can_admit is also
+        # where work that can NEVER fit raises — that must happen at offer
+        # time, not later from an unrelated conversation's release event
+        fits = self._can_admit(node_id, adm)
+        if len(q) == 0 and fits:
+            adm.ready(node_id)
+            return True
+        q.push(adm)
+        self.view.node(node_id).queued_conversations += 1
+        # structural backpressure count (independent of measured timings)
+        self.n_deferred_admissions = getattr(
+            self, "n_deferred_admissions", 0) + 1
+        sess = self.sessions.get(adm.cid)
+        if sess is not None:
+            sess.transition(QUEUED, now)
+        return False
+
+    def _pump(self, node_id: int, now: float):
+        """Re-offer parked work after `node_id` freed capacity. The scheduler
+        gets a defer/re-offer decision point per admission: returning a
+        Placement moves the waiting work to another node's queue; the default
+        (None) admits here, FIFO."""
+        q = self._admission[node_id]
+        while len(q) and self._can_admit(node_id, q.head):
+            adm = q.pop()
+            self.view.node(node_id).queued_conversations -= 1
+            pl = self.sched.reoffer_admission(adm.cid, node_id, self.view)
+            if pl is not None and pl.node_id != node_id:
+                self._offer(pl.node_id, adm, now)
+                continue
+            adm.ready(node_id)
+
+    # ----- shared observables -----------------------------------------------
+    def queue_waits(self) -> Dict[int, float]:
+        """Per-conversation admission wait (seconds) — the backpressure cost
+        overload benchmarks and capacity planning read."""
+        return {cid: s.queue_wait_s for cid, s in self.sessions.items()}

@@ -55,6 +55,17 @@ class Scheduler(abc.ABC):
     def on_conversation_end(self, cid: int, view: ClusterView) -> None:
         pass
 
+    def reoffer_admission(self, cid: int, node_id: int,
+                          view: ClusterView) -> Optional[Placement]:
+        """Optional defer/re-offer decision point (repro.core.runtime).
+
+        Called when `node_id` freed capacity and conversation `cid` is at the
+        head of its admission queue. Return None (the default) to admit on
+        `node_id` now — FIFO, no policy involvement, which keeps ConServe and
+        the baselines pure over ClusterView — or a Placement naming a
+        different node to move the waiting work there instead."""
+        return None
+
     # -- shared helpers -------------------------------------------------------
     @staticmethod
     def least_loaded_prefiller(view: ClusterView) -> int:

@@ -59,6 +59,13 @@ class NodeState:
     active_conversations: int = 0
     kv_capacity_tokens: int = 300_000
     slot_capacity: int = 64
+    # admission / backpressure observables (repro.core.runtime): work parked
+    # in this node's admission queue, KV slots currently held, and KV tokens
+    # reserved by admitted-but-not-yet-resident work. All three are counters
+    # the runtime already maintains — observations, never predictions.
+    queued_conversations: int = 0
+    used_slots: int = 0
+    reserved_kv_tokens: int = 0
     # health (observation-based straggler signal)
     observed_tbt_ema_s: float = 0.0
     alive: bool = True
@@ -66,6 +73,17 @@ class NodeState:
     @property
     def kv_utilization(self) -> float:
         return self.active_kv_tokens / max(self.kv_capacity_tokens, 1)
+
+    @property
+    def free_slots(self) -> int:
+        return self.slot_capacity - self.used_slots
+
+    @property
+    def kv_headroom_tokens(self) -> int:
+        """KV tokens this node can still take on: capacity minus live KV
+        minus reservations of admitted-in-flight work."""
+        return (self.kv_capacity_tokens - self.active_kv_tokens
+                - self.reserved_kv_tokens)
 
 
 class ClusterView:

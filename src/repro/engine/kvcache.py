@@ -86,11 +86,13 @@ def fold_decode_step(caches, updates, lens, mask, grouped, growing):
 class SlotKVCache:
     """Owns the cache pytree (batch dim = n_slots) plus per-slot lengths."""
 
-    def __init__(self, model: Model, n_slots: int, max_ctx: int):
+    def __init__(self, model: Model, n_slots: int, max_ctx: int,
+                 replica_id: Optional[int] = None):
         self.model = model
         self.cfg = model.cfg
         self.n_slots = n_slots
         self.max_ctx = max_ctx
+        self.replica_id = replica_id  # diagnostics only (acquire() error)
         self.caches = model.init_cache(n_slots, max_ctx)
         self.lengths = np.zeros(n_slots, np.int32)
         self.active = np.zeros(n_slots, bool)
@@ -105,7 +107,17 @@ class SlotKVCache:
     def acquire(self) -> int:
         free = np.flatnonzero(~self.active)
         if len(free) == 0:
-            raise RuntimeError("no free KV slots")
+            # Unreachable from the serve path: EngineServer admits every
+            # slot-holding stage through the per-node admission queue
+            # (repro.core.runtime) and only acquires after _can_admit saw a
+            # free slot. Kept loud for direct misuse of the cache API.
+            who = "?" if self.replica_id is None else self.replica_id
+            raise RuntimeError(
+                f"no free KV slots on replica {who}: "
+                f"{int(self.active.sum())}/{self.n_slots} slots active, "
+                f"{self.active_kv_tokens} live KV tokens; serve-path callers "
+                f"must wait in the node's admission queue instead of "
+                f"acquiring directly")
         s = int(free[0])
         self.active[s] = True
         self.lengths[s] = 0

@@ -81,13 +81,20 @@ def ctx_bucket(n: int, max_ctx: int) -> int:
 class ReplicaEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
                  max_ctx: int = 2048, replica_id: int = 0, role: str = "decode",
-                 warmup: bool = False):
+                 warmup: bool = False, attention_impl: str = "xla"):
+        """attention_impl: "xla" (default) serves decode attention through the
+        pure-jnp model path on every backend; "pallas" routes GQA decode
+        attention through the flash-decode kernel (ops.decode_attention) —
+        native on TPU, interpret-mode elsewhere. Threaded statically into the
+        jitted decode programs, so switching never recompiles the jnp path."""
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
-        self.kv = SlotKVCache(self.model, n_slots, max_ctx)
+        self.kv = SlotKVCache(self.model, n_slots, max_ctx,
+                              replica_id=replica_id)
         self.replica_id = replica_id
         self.role = role
+        self.attention_impl = attention_impl
         self.exact_prefill = any(k in ("rwkv6", "rglru")
                                  for k in cfg.block_pattern)
         self.compute_s = 0.0  # accumulated measured compute time
@@ -97,7 +104,8 @@ class ReplicaEngine:
 
         self._decode = jax.jit(
             lambda p, t, c, pos, lens: self.model.decode_step(
-                p, t, c, pos, kv_lens=lens))
+                p, t, c, pos, kv_lens=lens,
+                attention_impl=self.attention_impl))
         # fused donated decode programs, keyed by (scan length, ctx bucket)
         self._fused: Dict[Tuple[int, int], Any] = {}
         if warmup:
@@ -175,7 +183,8 @@ class ReplicaEngine:
                 caches, lens, tokens = carry
                 logits, updates = self.model.decode_step(
                     params, tokens, caches, lens, kv_lens=lens,
-                    ctx_limit=ctx_limit)
+                    ctx_limit=ctx_limit,
+                    attention_impl=self.attention_impl)
                 sampled = jnp.argmax(logits[:, :vocab], axis=-1).astype(
                     jnp.int32)
                 live = emit & (i < remaining)

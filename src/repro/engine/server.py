@@ -1,5 +1,6 @@
 """Serving loop over REAL JAX replicas, driven by the same `repro.core`
-schedulers as the cluster simulator.
+schedulers — and now the same `repro.core.runtime.Runtime` contract — as the
+cluster simulator.
 
 Replica compute is executed for real (measured wall time advances per-node
 logical clocks); KV transfers physically copy cache slots between replica
@@ -8,6 +9,18 @@ time only. The result: scheduler policies are exercised against a real
 engine — prefix reuse, slot pinning, one-shot transfer and occupancy
 accounting all have to actually work — while a full trace replays in
 seconds on CPU.
+
+Serving is organized as queue-fed stages over an explicit per-conversation
+state machine (`ServeSession`): arrival no longer runs prefill inline —
+every slot-holding stage (turn-1 prefill, the one-shot KV binding, remote
+turns) first passes ADMISSION on its target node. When the node has no free
+KV slot the work parks in that node's admission queue (session -> QUEUED,
+`NodeState.queued_conversations` observable) and is re-offered when a
+conversation ends and frees its slot — backpressure instead of the old
+`"no free KV slots"` crash, with `Scheduler.reoffer_admission` as the
+optional policy hook. The decode tail itself (ragged donated-KV scan,
+mid-chunk finish events) is byte-for-byte the contract documented in
+ROADMAP "Serving runtime".
 """
 from __future__ import annotations
 
@@ -22,6 +35,9 @@ import numpy as np
 
 from repro.core.conversation import Conversation, TurnView, view_of
 from repro.core.metrics import ConversationRecord, TurnRecord
+from repro.core.runtime import (Admission, AdmissionQueue, DECODING, DONE,
+                                PREFILLING, Runtime, ServeSession, TOOL_WAIT,
+                                TRANSFERRING)
 from repro.core.scheduler import Scheduler
 from repro.core.signals import ClusterView, NodeState, PrefillLatencyCurve
 
@@ -39,11 +55,11 @@ class _TurnTask:
     arrival_t: float = 0.0
 
 
-class EngineServer:
+class EngineServer(Runtime):
     def __init__(self, scheduler: Scheduler, replicas: List[ReplicaEngine],
                  link_bw_bytes_s: float = 25e9, seed: int = 0,
                  max_decode_chunk: int = 32, decode_mode: str = "fused",
-                 record_tokens: bool = False):
+                 record_tokens: bool = False, strict_accounting: bool = False):
         """decode_mode: "fused" runs up to `max_decode_chunk` tokens per
         dispatch through the donated in-place RAGGED scan (`decode_steps`):
         the chunk is sized from the longest remaining turn, each slot
@@ -52,7 +68,10 @@ class EngineServer:
         replays the pre-fusion one-dispatch-per-token path (kept for parity
         tests and before/after benchmarks).
         record_tokens: keep every sampled token per (cid, turn) in
-        `sampled_tokens` — O(total output tokens) memory, tests only."""
+        `sampled_tokens` — O(total output tokens) memory, tests only.
+        strict_accounting: at every conversation end, assert the NodeState
+        observables (active_kv_tokens, used_slots) still mirror the KV
+        caches' ground truth on every replica — drift detection for tests."""
         assert decode_mode in ("fused", "reference")
         self.sched = scheduler
         self.replicas = {r.replica_id: r for r in replicas}
@@ -63,6 +82,7 @@ class EngineServer:
                                            DECODE_CHUNKS[-1]))
         self.decode_mode = decode_mode
         self.record_tokens = record_tokens
+        self.strict_accounting = strict_accounting
         self.seed = seed
         states = {}
         for r in replicas:
@@ -78,12 +98,16 @@ class EngineServer:
         self.states = states
         self.clock: Dict[int, float] = {r.replica_id: 0.0 for r in replicas}
         self.records: Dict[int, ConversationRecord] = {}
+        self.sessions: Dict[int, ServeSession] = {}
+        self._admission: Dict[int, AdmissionQueue] = {
+            r.replica_id: AdmissionQueue(r.replica_id) for r in replicas}
         self._tokens: Dict[Tuple[int, int], np.ndarray] = {}
         self._slots: Dict[int, Tuple[int, int]] = {}  # cid -> (node, slot)
         self._decode_q: Dict[int, List[_TurnTask]] = {
             r.replica_id: [] for r in replicas}
         self._events: List[Tuple[float, int, object]] = []
         self._seq = itertools.count()
+        self._now = 0.0
         self.transfer_bytes = 0.0
         self.n_transfers = 0
         # sampled token stream per (cid, turn_idx) when record_tokens is
@@ -95,8 +119,9 @@ class EngineServer:
     # ----- helpers ---------------------------------------------------------------
     def _turn_tokens(self, conv: Conversation, idx: int) -> np.ndarray:
         # keyed per (cid, turn) so token content is independent of the ORDER
-        # turns are first reached — decode chunking / scheduling changes may
-        # reorder events, and token streams must stay comparable across runs
+        # turns are first reached — decode chunking / scheduling / ADMISSION
+        # changes may reorder events, and token streams must stay comparable
+        # across runs
         key = (conv.cid, idx)
         if key not in self._tokens:
             vocab = next(iter(self.replicas.values())).cfg.vocab_size
@@ -110,27 +135,83 @@ class EngineServer:
     def _push(self, t: float, fn):
         heapq.heappush(self._events, (t, next(self._seq), fn))
 
-    # ----- main loop ---------------------------------------------------------------
-    def serve(self, convs: List[Conversation]) -> List[ConversationRecord]:
+    # ----- Runtime protocol --------------------------------------------------------
+    def submit(self, convs: List[Conversation]) -> "EngineServer":
         for c in convs:
             self.records[c.cid] = ConversationRecord(c.cid, c.arrival_s)
+            self._make_session(c.cid, c.arrival_s)
             self._push(c.arrival_s, lambda c=c: self._arrive(c))
+        return self
+
+    def run(self) -> "EngineServer":
         while self._events:
             t, _, fn = heapq.heappop(self._events)
             self._now = t
             fn()
+        return self
+
+    def results(self) -> List[ConversationRecord]:
         return [r for r in self.records.values() if r.turns]
+
+    def serve(self, convs: List[Conversation]) -> List[ConversationRecord]:
+        return self.submit(convs).run().results()
+
+    def _can_admit(self, node_id: int, adm: Admission) -> bool:
+        """Ground truth: a free KV slot on the replica. A slot is a fixed
+        max_ctx region, so a free slot IS the headroom guarantee — except
+        for work that can never fit, which must fail loudly, not queue
+        forever."""
+        node = self.replicas[node_id]
+        if adm.need_tokens > node.kv.max_ctx:
+            raise RuntimeError(
+                f"conversation {adm.cid} needs {adm.need_tokens} KV tokens "
+                f"but replica {node_id} slots hold max_ctx="
+                f"{node.kv.max_ctx}; no amount of queueing can admit it")
+        return bool((~node.kv.active).any())
+
+    def check_accounting(self):
+        """Assert every NodeState observable mirrors its replica's KV ground
+        truth (satellite of the runtime redesign: observation means the
+        counters must BE the state, not an estimate of it)."""
+        for nid, node in self.replicas.items():
+            st = self.states[nid]
+            assert st.active_kv_tokens == node.kv.active_kv_tokens, (
+                f"replica {nid}: NodeState.active_kv_tokens="
+                f"{st.active_kv_tokens} != kv ground truth "
+                f"{node.kv.active_kv_tokens}")
+            assert st.used_slots == int(node.kv.active.sum()), (
+                f"replica {nid}: NodeState.used_slots={st.used_slots} != "
+                f"{int(node.kv.active.sum())} active KV slots")
 
     # ----- arrival & turn-1 prefill -------------------------------------------------
     def _arrive(self, conv: Conversation):
         pl = self.sched.place_first_prefill(view_of(conv), self.view)
-        node = self.replicas[pl.node_id]
         st = self.states[pl.node_id]
+        # backlog observable covers parked + admitted-unstarted prefill work
         st.queued_prefill_tokens += conv.first_input_len
-        start = max(self._now, self.clock[pl.node_id])
+        self._offer(pl.node_id,
+                    Admission(conv.cid, conv.first_input_len,
+                              lambda nid, conv=conv, placed=pl.node_id:
+                              self._prefill_turn1(conv, nid, placed),
+                              kind="arrival"),
+                    self._now)
+
+    def _prefill_turn1(self, conv: Conversation, node_id: int,
+                       placed_id: Optional[int] = None):
+        node = self.replicas[node_id]
+        st = self.states[node_id]
+        if placed_id is not None and placed_id != node_id:
+            # a reoffer_admission policy moved this arrival: the backlog
+            # observable follows the work to the admitting node
+            self.states[placed_id].queued_prefill_tokens -= \
+                conv.first_input_len
+            st.queued_prefill_tokens += conv.first_input_len
+        start = max(self._now, self.clock[node_id])
+        self.sessions[conv.cid].transition(PREFILLING, start)
 
         # run the real prefill
         slot = node.kv.acquire()
+        st.used_slots += 1
         tokens = self._turn_tokens(conv, 0)
         fe = None
         if node.cfg.frontend != "none":
@@ -138,38 +219,67 @@ class EngineServer:
                             node.cfg.d_model), node.cfg.jnp_dtype)
         next_tok, dt = node.prefill_conversation(slot, tokens, fe)
         done_t = start + dt
-        self.clock[pl.node_id] = done_t
+        self.clock[node_id] = done_t
         st.queued_prefill_tokens -= conv.first_input_len
+        # mirror the slot's WRITTEN length (includes frontend positions),
+        # not the nominal input length — the two drift for frontend models
+        written = int(node.kv.lengths[slot])
+        st.active_kv_tokens += written
 
         if node.role in ("decode", "mixed"):
             # collocated: stay put
-            self._bind_done(conv, pl.node_id, slot, int(next_tok), done_t)
+            self._bind_done(conv, node_id, slot, int(next_tok), done_t)
             return
-        # disaggregated: bind decoder + one-shot transfer
+        # disaggregated: bind decoder + one-shot transfer. The prefiller's
+        # slot frees NOW (the package travels host-side); the binding itself
+        # must pass admission on the decoder.
         bind = self.sched.bind_decoder(view_of(conv), self.view)
-        dec = self.replicas[bind.node_id]
         pkg = node.kv.export_slot(slot)
         node.kv.release(slot)
+        st.used_slots -= 1
+        st.active_kv_tokens -= written
+        self._pump(node_id, self._now)
+        # if the decoder is full, the binding parks at its prefill-completion
+        # time (done_t): that is when the package became ready to move
+        self._offer(bind.node_id,
+                    Admission(conv.cid, pkg["length"],
+                              lambda nid, conv=conv, pkg=pkg,
+                              nt=int(next_tok), done_t=done_t:
+                              self._transfer_bind(conv, nid, pkg, nt,
+                                                  max(done_t, self._now))),
+                    done_t)
+
+    def _transfer_bind(self, conv: Conversation, node_id: int, pkg,
+                       next_tok: int, t: float):
+        """One-shot KV transfer onto the admitted decoder (t = when the
+        package starts moving: prefill completion, or the later admission)."""
+        dec = self.replicas[node_id]
+        st = self.states[node_id]
+        self.sessions[conv.cid].transition(TRANSFERRING, t)
         dslot = dec.kv.acquire()
+        st.used_slots += 1
         dec.kv.import_slot(dslot, pkg)
-        nbytes = node.kv.nbytes_of(pkg)
+        st.active_kv_tokens += pkg["length"]
+        nbytes = dec.kv.nbytes_of(pkg)
         self.transfer_bytes += nbytes
         self.n_transfers += 1
         self.records[conv.cid].n_kv_transfers += 1
         xfer_t = nbytes / self.link_bw + 0.005
-        self._bind_done(conv, bind.node_id, dslot, int(next_tok),
-                        done_t + xfer_t)
+        self._bind_done(conv, node_id, dslot, next_tok, t + xfer_t)
 
     def _bind_done(self, conv, node_id, slot, next_tok, t):
         self._slots[conv.cid] = (node_id, slot)
+        self.sessions[conv.cid].node_id = node_id
         st = self.states[node_id]
         st.active_conversations += 1
-        st.active_kv_tokens += conv.first_input_len
         self._push(t, lambda: self._begin_decode(conv, 0, next_tok, t))
 
     # ----- decode ---------------------------------------------------------------------
     def _begin_decode(self, conv, turn_idx, next_tok, arrival_t):
         node_id, slot = self._slots[conv.cid]
+        sess = self.sessions[conv.cid]
+        sess.turn_idx = turn_idx
+        sess.transition(DECODING, self._now)
         task = _TurnTask(conv=conv, turn_idx=turn_idx, slot=slot,
                          remaining=conv.turns[turn_idx].output_tokens,
                          next_token=next_tok, arrival_t=arrival_t)
@@ -261,21 +371,29 @@ class EngineServer:
     def _finish_turn(self, task: _TurnTask, t: float):
         conv, idx = task.conv, task.turn_idx
         turn = conv.turns[idx]
+        sess = self.sessions[conv.cid]
         self.records[conv.cid].turns.append(TurnRecord(
             turn_idx=idx, arrival_s=task.arrival_t,
             first_token_s=task.first_token_t, last_token_s=t,
             n_output_tokens=turn.output_tokens))
         if idx + 1 < conv.n_turns:
+            sess.transition(TOOL_WAIT, t)
             ready = t + turn.tool_time_s
             self._push(ready, lambda: self._next_turn(conv, idx + 1, ready))
         else:
+            sess.transition(DONE, t)
             node_id, slot = self._slots.pop(conv.cid)
             node = self.replicas[node_id]
             st = self.states[node_id]
             st.active_kv_tokens -= int(node.kv.lengths[slot])
             st.active_conversations -= 1
             node.kv.release(slot)
+            st.used_slots -= 1
             self.sched.on_conversation_end(conv.cid, self.view)
+            if self.strict_accounting:
+                self.check_accounting()
+            # occupancy freed: re-offer parked admissions (backpressure)
+            self._pump(node_id, self._now)
 
     # ----- turn 2+ --------------------------------------------------------------------
     def _next_turn(self, conv: Conversation, idx: int, ready_t: float):
@@ -290,8 +408,10 @@ class EngineServer:
         self.records[conv.cid].n_kv_transfers += int(pl.kv_transfer)
 
         if pl.node_id == node_id:
-            # ConServe fast path: local append-prefill with hot prefix
+            # ConServe fast path: local append-prefill with hot prefix; the
+            # slot is already held, so no admission is involved
             start = max(ready_t, self.clock[node_id])
+            self.sessions[conv.cid].transition(PREFILLING, start)
             next_tok, dt = node.append_prefill(slot, tokens)
             self.clock[node_id] = start + dt
             self.states[node_id].active_kv_tokens += len(tokens)
@@ -299,24 +419,49 @@ class EngineServer:
                        lambda: self._begin_decode(conv, idx, int(next_tok),
                                                   ready_t))
             return
-        # remote append-prefill: move KV to the remote node, prefill there,
-        # move back (bidirectional — the per-turn disaggregation penalty)
+        # remote append-prefill needs a temporary slot on the remote node —
+        # that acquisition passes admission like every other one
         self.records[conv.cid].n_remote_turns += 1
-        remote = self.replicas[pl.node_id]
+        self._offer(pl.node_id,
+                    Admission(conv.cid, ctx + len(tokens),
+                              lambda nid, conv=conv, idx=idx:
+                              self._remote_turn(conv, idx, nid,
+                                                max(ready_t, self._now))),
+                    self._now)
+
+    def _remote_turn(self, conv: Conversation, idx: int, remote_id: int,
+                     ready_t: float):
+        """Remote append-prefill: move KV to the remote node, prefill there,
+        move back (bidirectional — the per-turn disaggregation penalty)."""
+        node_id, slot = self._slots[conv.cid]
+        node = self.replicas[node_id]
+        remote = self.replicas[remote_id]
+        rst = self.states[remote_id]
+        tokens = self._turn_tokens(conv, idx)
+        self.sessions[conv.cid].transition(TRANSFERRING, ready_t)
         pkg = node.kv.export_slot(slot)
         nbytes = node.kv.nbytes_of(pkg)
         rslot = remote.kv.acquire()
+        rst.used_slots += 1
         remote.kv.import_slot(rslot, pkg)
-        t0 = max(ready_t, self.clock[pl.node_id]) + nbytes / self.link_bw
+        rst.active_kv_tokens += pkg["length"]
+        t0 = max(ready_t, self.clock[remote_id]) + nbytes / self.link_bw
+        self.sessions[conv.cid].transition(PREFILLING, t0)
         next_tok, dt = remote.append_prefill(rslot, tokens)
+        # the append landed in the remote slot: mirror it before the release
+        # below subtracts the slot's full (grown) length
+        rst.active_kv_tokens += len(tokens)
         pkg2 = remote.kv.export_slot(rslot)
         nbytes2 = remote.kv.nbytes_of(pkg2)
+        rst.active_kv_tokens -= int(remote.kv.lengths[rslot])
         remote.kv.release(rslot)
+        rst.used_slots -= 1
         node.kv.import_slot(slot, pkg2)
         self.transfer_bytes += nbytes + nbytes2
         self.n_transfers += 2
         done = t0 + dt + nbytes2 / self.link_bw
-        self.clock[pl.node_id] = t0 + dt
+        self.clock[remote_id] = t0 + dt
         self.states[node_id].active_kv_tokens += len(tokens)
+        self._pump(remote_id, self._now)
         self._push(done, lambda: self._begin_decode(conv, idx, int(next_tok),
                                                     ready_t))

@@ -1,14 +1,36 @@
 """Serving launcher: ConServe deployment driver.
 
-Two modes:
+Three modes:
   --engine  : real JAX replicas on local devices (CPU demo / single host)
+  --sim     : the calibrated discrete-event cluster runtime
   default   : lower+compile the serve_step for the production mesh
               (prefill + decode programs for the chosen arch), proving the
               deployment's distribution config before touching hardware.
 
-  python -m repro.launch.serve --arch qwen3-0.6b [--multi-pod] [--engine]
+--engine and --sim drive their backend through the ONE shared
+`repro.core.runtime.Runtime` contract (submit/run/results + admission
+control), so the launcher — like the schedulers — cannot tell the two
+scales apart.
+
+  python -m repro.launch.serve --arch qwen3-0.6b [--multi-pod]
+                               [--engine | --sim] [--slots N]
 """
 import argparse
+
+
+def _drive(runtime, trace):
+    """The whole serving contract, backend-agnostic."""
+    from repro.core.metrics import summarize
+    recs = runtime.serve(trace)
+    s = summarize(recs)
+    for k in ("ttfet_gmean", "ttfet_p95", "last_tbt_gmean", "e2e_gmean",
+              "kv_transfers_per_conv"):
+        print(f"  {k}: {s[k]:.4f}")
+    waits = [w for w in runtime.queue_waits().values() if w > 0]
+    if waits:
+        print(f"  admission waits: {len(waits)} conversations, "
+              f"max {max(waits):.3f}s (backpressure, not a crash)")
+    return recs
 
 
 def main():
@@ -16,16 +38,19 @@ def main():
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--engine", action="store_true")
+    ap.add_argument("--sim", action="store_true")
     ap.add_argument("--scheduler", default="conserve",
                     choices=["conserve", "ampd", "collocated", "full_disagg"])
     ap.add_argument("--n-conversations", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=16,
+                    help="engine: KV slots per replica (small values "
+                         "exercise admission backpressure)")
     args = ap.parse_args()
 
     if args.engine:
         import jax
         from repro.configs import get_reduced
         from repro.core import make_scheduler
-        from repro.core.metrics import summarize
         from repro.engine import EngineServer, ReplicaEngine
         from repro.models import build_model
         from repro.traces import TraceConfig, generate_trace
@@ -33,9 +58,9 @@ def main():
         cfg = get_reduced(args.arch)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        reps = [ReplicaEngine(cfg, params, n_slots=16, max_ctx=1024,
+        reps = [ReplicaEngine(cfg, params, n_slots=args.slots, max_ctx=1024,
                               replica_id=0, role="prefill")] + [
-            ReplicaEngine(cfg, params, n_slots=16, max_ctx=1024,
+            ReplicaEngine(cfg, params, n_slots=args.slots, max_ctx=1024,
                           replica_id=i, role="decode") for i in (1, 2)]
         srv = EngineServer(make_scheduler(args.scheduler), reps)
         tc = TraceConfig(first_input_median=150, first_input_max=500,
@@ -43,11 +68,17 @@ def main():
                          output_max=32, mean_turns=3.0, max_turns=6,
                          tool_mean_s=0.05)
         trace = generate_trace(args.n_conversations, 2.0, cfg=tc)
-        recs = srv.serve(trace)
-        s = summarize(recs)
-        for k in ("ttfet_gmean", "ttfet_p95", "last_tbt_gmean", "e2e_gmean",
-                  "kv_transfers_per_conv"):
-            print(f"  {k}: {s[k]:.4f}")
+        _drive(srv, trace)
+        return
+
+    if args.sim:
+        from repro.cluster import paper_deployment
+        from repro.traces import TraceConfig, generate_trace
+
+        sim = paper_deployment(args.scheduler)
+        trace = generate_trace(args.n_conversations, 1.634,
+                               TraceConfig(seed=17))
+        _drive(sim, trace)
         return
 
     import os

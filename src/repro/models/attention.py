@@ -484,21 +484,44 @@ def _trim_ctx(leaf, ctx_limit: Optional[int]):
 
 
 def gqa_decode(params, cfg: ModelConfig, kind: str, x1, position,
-               cache: Dict, kv_lens=None, ctx_limit: Optional[int] = None):
+               cache: Dict, kv_lens=None, ctx_limit: Optional[int] = None,
+               attention_impl: str = "xla"):
     """x1: (B,1,D); cache: {"k","v"} (B,L,Hkv,hd); position scalar or (B,).
     `ctx_limit` (static) is an upper bound on kv_lens: the cache read is
-    trimmed to it. Returns (out, new_kv)."""
+    trimmed to it. `attention_impl="pallas"` (static) routes global-attention
+    decode through the flash-decode kernel (scalar-prefetch trimmed grid —
+    native on TPU, interpret-mode elsewhere); cases the kernel does not
+    cover (no kv_lens, sliding window, non-block-multiple trimmed length)
+    fall back to the jnp two-branch combine. Returns (out, new_kv)."""
     q, k, v = _proj_qkv(params, cfg, x1)
     theta = cfg.rope_theta if kind == ATTN_GLOBAL else getattr(
         cfg, "rope_theta_local", cfg.rope_theta)
     q = rope_single(q, position, theta)
     k = rope_single(k, position, theta)
     window = cfg.window if kind == ATTN_LOCAL else 0
-    out = decode_attention(q,
-                           dequantize_kv(_trim_ctx(cache["k"], ctx_limit), cfg),
-                           dequantize_kv(_trim_ctx(cache["v"], ctx_limit), cfg),
-                           k, v, kv_lens=kv_lens, window=window,
-                           pos=jnp.asarray(position))
+    k_c = dequantize_kv(_trim_ctx(cache["k"], ctx_limit), cfg)
+    v_c = dequantize_kv(_trim_ctx(cache["v"], ctx_limit), cfg)
+    S = k_c.shape[1]
+    use_pallas = (attention_impl == "pallas" and kv_lens is not None
+                  and window == 0 and (S <= 256 or S % 256 == 0))
+    if use_pallas:
+        from repro.kernels import ops
+        B = q.shape[0]
+        lens = jnp.asarray(kv_lens, jnp.int32)
+        # The kernel reads one contiguous buffer, so the fresh token's K/V
+        # is placed at each sequence's live length (engine callers guarantee
+        # kv_lens < the trimmed buffer length: the slot has append room).
+        # This stages a scattered copy of the trimmed read — the fetch-
+        # trimming happens inside the kernel grid, which never spans past
+        # max(lens)+1 when the caller also passes a tight ctx_limit.
+        idx = jnp.arange(B)
+        k_all = k_c.at[idx, lens].set(k[:, 0].astype(k_c.dtype))
+        v_all = v_c.at[idx, lens].set(v[:, 0].astype(v_c.dtype))
+        out = ops.decode_attention(q[:, 0], k_all, v_all, lens + 1,
+                                   impl="pallas")[:, None]
+    else:
+        out = decode_attention(q, k_c, v_c, k, v, kv_lens=kv_lens,
+                               window=window, pos=jnp.asarray(position))
     out = out.reshape(x1.shape[0], 1, cfg.n_heads * cfg.head_dim)
     return out @ params["wo"], {"k": quantize_kv(k, cfg),
                                 "v": quantize_kv(v, cfg)}

@@ -121,12 +121,14 @@ def block_prefill(params, cfg: ModelConfig, kind: str, x, start_pos,
 
 
 def block_decode(params, cfg: ModelConfig, kind: str, x1, position,
-                 cache: Dict, kv_lens=None,
-                 ctx_limit: Optional[int] = None) -> Tuple[jnp.ndarray, Dict]:
+                 cache: Dict, kv_lens=None, ctx_limit: Optional[int] = None,
+                 attention_impl: str = "xla") -> Tuple[jnp.ndarray, Dict]:
     """x1: (B,1,D). Returns (x_out, cache_updates): for attention kinds the
     new token's KV entries (engine appends); for recurrent kinds the updated
     state. `ctx_limit` (static upper bound on kv_lens) trims attention cache
-    reads; recurrent state is fixed-size and unaffected."""
+    reads; recurrent state is fixed-size and unaffected. `attention_impl`
+    (static) selects the GQA decode attention kernel; MLA and recurrent
+    kinds have no Pallas decode kernel and ignore it."""
     h = apply_norm(params["ln1"], cfg, x1)
     updates: Dict[str, Any] = {}
     if kind == ATTN_MLA:
@@ -135,7 +137,8 @@ def block_decode(params, cfg: ModelConfig, kind: str, x1, position,
     elif kind in (ATTN_GLOBAL, ATTN_LOCAL):
         out, cache_out = gqa_decode(params["attn"], cfg, kind, h, position,
                                     cache, kv_lens=kv_lens,
-                                    ctx_limit=ctx_limit)
+                                    ctx_limit=ctx_limit,
+                                    attention_impl=attention_impl)
     elif kind == RWKV6:
         out, cache_out = rwkv6_decode(params["tmix"], cfg, h,
                                       {"s": cache["s"], "shift": cache["shift"]})

@@ -77,17 +77,22 @@ class Model:
                                       logits_at=logits_at)
 
     def decode_step(self, params, token, caches, position, kv_lens=None,
-                    ctx_limit=None):
+                    ctx_limit=None, attention_impl: str = "xla"):
         """(logits (B,V), cache_updates). Growing caches return the new
         token's entries only; the cache manager appends (DESIGN.md §5).
         `ctx_limit` (static) is an upper bound on kv_lens: attention cache
-        reads are trimmed to it (decoder-only path; ignored for encdec)."""
+        reads are trimmed to it (decoder-only path; ignored for encdec).
+        `attention_impl` (static): "pallas" serves GQA decode attention
+        through the flash-decode kernel; "xla" keeps the jnp path. Families
+        the kernel does not cover (MLA, sliding-window, recurrent, encdec)
+        fall back to jnp regardless."""
         if self.cfg.is_encoder_decoder:
             return encdec.encdec_decode(params, self.cfg, token, caches,
                                         position, kv_lens=kv_lens)
         return transformer.lm_decode(params, self.cfg, token, caches,
                                      position, kv_lens=kv_lens,
-                                     ctx_limit=ctx_limit)
+                                     ctx_limit=ctx_limit,
+                                     attention_impl=attention_impl)
 
 
 GROWING_KEYS = ("k", "v", "ckv", "krope")

@@ -161,11 +161,12 @@ def lm_prefill(params, cfg: ModelConfig, tokens, *, caches=None,
 
 
 def lm_decode(params, cfg: ModelConfig, token, caches, position,
-              kv_lens=None, ctx_limit=None):
+              kv_lens=None, ctx_limit=None, attention_impl: str = "xla"):
     """One decode step. token: (B,) int32; caches as from lm_cache_skeleton.
     Returns (logits (B,V), cache_updates) — attention updates are the new
     token's KV entries only (DESIGN.md §5). `ctx_limit` (static int) is an
-    upper bound on kv_lens used to trim attention cache reads."""
+    upper bound on kv_lens used to trim attention cache reads;
+    `attention_impl` (static) selects the GQA decode attention kernel."""
     pat, n_groups, rem = cfg.pattern_groups()
     h = embed(params["embed"], cfg, token[:, None]).astype(cfg.jnp_dtype)
 
@@ -179,7 +180,8 @@ def lm_decode(params, cfg: ModelConfig, token, caches, position,
                 key = f"p{i}"
                 hh, up = block_decode(gparams[key], cfg, kind, hh, position,
                                       gcache[key], kv_lens=kv_lens,
-                                      ctx_limit=ctx_limit)
+                                      ctx_limit=ctx_limit,
+                                      attention_impl=attention_impl)
                 outs[key] = up
             return hh, outs
 
@@ -201,7 +203,8 @@ def lm_decode(params, cfg: ModelConfig, token, caches, position,
             key = f"p{i}"
             h, up = block_decode(params["rem"][key], cfg, kind, h, position,
                                  caches["rem"][key], kv_lens=kv_lens,
-                                 ctx_limit=ctx_limit)
+                                 ctx_limit=ctx_limit,
+                                 attention_impl=attention_impl)
             rups[key] = up
         updates["rem"] = rups
     h = apply_norm(params["final_norm"], cfg, h)

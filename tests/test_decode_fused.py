@@ -284,8 +284,10 @@ def test_server_fused_matches_reference_end_to_end(qwen):
                 ReplicaEngine(cfg, params, n_slots=8, max_ctx=512,
                               replica_id=1)]
         srv = EngineServer(make_scheduler("conserve"), reps,
-                           decode_mode=mode, record_tokens=True)
+                           decode_mode=mode, record_tokens=True,
+                           strict_accounting=True)
         recs = srv.serve(trace)
+        srv.check_accounting()
         return srv, recs
 
     s_ref, r_ref = run("reference")
@@ -332,8 +334,10 @@ def test_server_staggered_finish_fused_matches_reference(qwen):
         rep = ReplicaEngine(cfg, params, n_slots=8, max_ctx=256,
                             replica_id=0, role="mixed")
         srv = EngineServer(make_scheduler("conserve"), [rep],
-                           decode_mode=mode, record_tokens=True)
+                           decode_mode=mode, record_tokens=True,
+                           strict_accounting=True)
         recs = srv.serve(_staggered_trace())
+        srv.check_accounting()
         return srv, {c.cid: c for c in recs}
 
     s_ref, r_ref = run("reference")
