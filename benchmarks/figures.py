@@ -350,7 +350,14 @@ def decode_tail_bench():
 
 def serve_overload_bench():
     """Saturated serving through admission backpressure on both backends
-    (writes BENCH_serve_overload.json at the repo root)."""
+    (writes BENCH_serve_overload.json at the repo root). Series:
+    `serve_overload_engine` / `serve_overload_sim` (completion + queue wait
+    + p95 TTFET under 2x oversubscription, now with per-node
+    masked_forward_fraction / slot_busy_fraction lane observables) and
+    `serve_overload_rotation` (continuous decode rotation vs
+    chunk-boundary-only admission on the staggered overload trace:
+    effective decode tokens/s, masked-forward fractions, p95 queue-wait
+    ratio — the rotation win in the perf trajectory)."""
     from . import serve_overload
     serve_overload.main(quick=True)
 

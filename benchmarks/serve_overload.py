@@ -3,18 +3,27 @@
 backpressure on both backends — the workload class that used to crash the
 engine with "no free KV slots" and silently overcommit the simulator.
 
-Records queue-wait and p95 TTFET under saturation:
+Records queue-wait and p95 TTFET under saturation, plus the per-node lane
+observables (`masked_forward_fraction`, `slot_busy_fraction`) that make the
+decode-rotation win visible in the perf trajectory:
   * engine: one mixed real-JAX replica with few KV slots, arrivals packed
     at the trace head, 2x oversubscribed — every conversation beyond the
     slot count waits in the admission queue and is re-offered as
     conversations finish;
   * simulator: a disaggregated deployment whose decoders declare finite
-    slots, same 2x oversubscription through the identical Runtime contract.
+    slots, same 2x oversubscription through the identical Runtime contract;
+  * staggered rotation scenario: >= 2x oversubscribed single mixed replica
+    serving staggered output lengths, run with continuous decode rotation
+    (adaptive chunk cuts + mid-tail refill) vs the chunk-boundary-only
+    admission baseline — EFFECTIVE decode tokens/s (live tokens per second
+    of decode-engine time: masked no-op forwards and dispatch overhead both
+    count against it) and p95 queue wait for each.
 
 Writes BENCH_serve_overload.json (BENCH_serve_overload_quick.json under
 --quick) at the repo root; CI runs the quick variant and fails unless every
 submitted conversation completes (no slot-overflow crash, no stuck
-admission queue).
+admission queue) AND rotation's effective tokens/s stays at or above the
+chunk-boundary baseline on the staggered trace.
 
 Usage: PYTHONPATH=src python -m benchmarks.serve_overload [--quick]
 """
@@ -62,6 +71,14 @@ def _summary(runtime, recs, n_convs, n_slots):
         "queue_wait_p95_s": p95(waits),
         "queue_wait_max_s": float(waits[-1]) if waits else 0.0,
         "ttfet_p95_s": p95(ttfet),
+        # per-node lane observables: how busy the decode rotation kept its
+        # KV slots (prefill-only nodes report 0/0 — they never decode)
+        "lane_observables": {
+            str(n.node_id): {
+                "masked_forward_fraction": round(
+                    n.masked_forward_fraction, 4),
+                "slot_busy_fraction": round(n.slot_busy_fraction, 4),
+            } for n in runtime.view.nodes()},
     }
 
 
@@ -81,6 +98,107 @@ def _engine_overload(n_slots: int, n_convs: int):
                        strict_accounting=True)
     recs = srv.serve(_overload_trace(n_convs))
     return _summary(srv, recs, n_convs, n_slots)
+
+
+# staggered single-turn outputs for the rotation comparison: early finishes
+# strand lanes inside long chunks under chunk-boundary admission, while the
+# queue of parked conversations supplies the rotation's mid-tail refills
+STAGGERED_OUTPUTS = (6, 10, 14, 19, 25, 32, 40, 48)
+
+
+def _staggered_trace(n_convs: int):
+    from repro.core.conversation import Conversation, Turn
+    return [Conversation(cid=i, arrival_s=i * 1e-9, turns=[
+        Turn(append_tokens=12 + (i % 5) * 2,
+             output_tokens=STAGGERED_OUTPUTS[i % len(STAGGERED_OUTPUTS)],
+             tool_time_s=0.0)])
+        for i in range(n_convs)]
+
+
+def _staggered_rotation(n_slots: int, n_convs: int, repeats: int = 3):
+    """Rotation on vs off (chunk-boundary-only admission) on the SAME
+    staggered overload trace and replica shape. Effective decode tokens/s =
+    live decoded tokens per second of decode-engine time — masked no-op
+    forwards and dispatch overhead both land in the denominator, so neither
+    policy can hide its cost.
+
+    Measurement discipline: one replica per config (compiled buckets and
+    the eager prefill path stay warm across passes — slots fully drain at
+    conversation end, so replicas are reusable), one discarded warm pair,
+    then `repeats` measured passes ALTERNATING between the configs, taking
+    each config's BEST pass — machine-load noise on shared runners is
+    one-sided, so best-of-N recovers the compute floor (the same
+    discipline decode_tail's policy comparison uses). The lane observables
+    are structural (event-order determined), the clocks are real wall
+    time."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.core import make_scheduler
+    from repro.core.metrics import p95
+    from repro.engine import EngineServer, ReplicaEngine
+    from repro.models import build_model
+
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    trace = _staggered_trace(n_convs)
+    engines = {rot: ReplicaEngine(cfg, params, n_slots=n_slots, max_ctx=256,
+                                  replica_id=0, role="mixed")
+               for rot in (False, True)}
+
+    def one_pass(rotation: bool):
+        rep = engines[rotation]
+        rep.decode_s = rep.compute_s = 0.0
+        rep.n_decode_tokens = rep.n_prefill_tokens = 0
+        srv = EngineServer(make_scheduler("conserve"), [rep],
+                           strict_accounting=True, rotation=rotation)
+        recs = srv.serve(trace)
+        assert len(recs) == n_convs
+        waits = sorted(srv.queue_waits().values())
+        st = srv.states[0]
+        return {
+            "effective_decode_tok_s": rep.n_decode_tokens / rep.decode_s,
+            "decode_tokens": rep.n_decode_tokens,
+            "decode_s": round(rep.decode_s, 4),
+            "decode_scan_steps": st.decode_scan_steps,
+            "makespan_s": round(
+                max(t.last_token_s for r in recs for t in r.turns), 4),
+            "queue_wait_p95_s": p95(waits),
+            "masked_forward_fraction": round(st.masked_forward_fraction, 4),
+            "slot_busy_fraction": round(st.slot_busy_fraction, 4),
+        }
+
+    one_pass(False), one_pass(True)  # warm pair, discarded
+    passes = {False: [], True: []}
+    for _ in range(max(1, repeats)):
+        for rot in (False, True):
+            passes[rot].append(one_pass(rot))
+
+    def agg(rot):
+        # report the best pass VERBATIM (decode_tokens / decode_s /
+        # effective_decode_tok_s stay mutually consistent), plus the
+        # cross-pass queue-wait floor as its own clearly-named field
+        ps = passes[rot]
+        out = dict(max(ps, key=lambda p: p["effective_decode_tok_s"]))
+        out["queue_wait_p95_best_s"] = min(p["queue_wait_p95_s"]
+                                           for p in ps)
+        return out
+
+    rot, bound = agg(True), agg(False)
+    return {
+        "n_conversations": n_convs,
+        "decoder_slots": n_slots,
+        "oversubscription": n_convs / n_slots,
+        "outputs_cycle": list(STAGGERED_OUTPUTS),
+        "repeats": max(1, repeats),
+        "rotation": rot,
+        "chunk_boundary": bound,
+        "rotation_speedup": (rot["effective_decode_tok_s"]
+                             / bound["effective_decode_tok_s"]),
+        "queue_wait_p95_ratio": (rot["queue_wait_p95_best_s"]
+                                 / max(bound["queue_wait_p95_best_s"],
+                                       1e-9)),
+    }
 
 
 def _sim_overload(n_slots_per_decoder: int, n_convs: int):
@@ -123,8 +241,19 @@ def main(quick: bool = False):
          f"queued={sim['queued_at_least_once']};"
          f"ttfet_p95={sim['ttfet_p95_s']:.3f}s")
 
+    stag = _staggered_rotation(n_slots=8, n_convs=16 if quick else 24,
+                               repeats=3 if quick else 5)
+    emit("serve_overload_rotation",
+         1e6 / stag["rotation"]["effective_decode_tok_s"],
+         f"rotation={stag['rotation']['effective_decode_tok_s']:.1f}tok/s;"
+         f"boundary={stag['chunk_boundary']['effective_decode_tok_s']:.1f}"
+         f"tok/s;speedup={stag['rotation_speedup']:.2f}x;"
+         f"masked={stag['rotation']['masked_forward_fraction']:.3f}"
+         f"vs{stag['chunk_boundary']['masked_forward_fraction']:.3f};"
+         f"qwait_p95_ratio={stag['queue_wait_p95_ratio']:.2f}")
+
     payload = {"backend": jax.default_backend(), "quick": quick,
-               "engine": eng, "simulator": sim}
+               "engine": eng, "simulator": sim, "staggered": stag}
     (BENCH_QUICK_PATH if quick else BENCH_PATH).write_text(
         json.dumps(payload, indent=1))
     return payload

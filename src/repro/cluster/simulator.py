@@ -19,6 +19,14 @@ Fidelity notes (mapped to the paper):
  * Failures: a dead decoder's conversations recover by deterministic replay
    — re-prefill the journaled context on the prefiller and rebind; exactly
    ConServe's one-shot mechanism, reused (DESIGN.md §5).
+ * Decode rotation: decoder iterations are single-token and jobs leave the
+   batch the moment their output completes, so the simulator is structurally
+   a continuous rotation — conversation ends pump the admission queue at the
+   iteration (= chunk cut) where the slot freed, `Scheduler.select_refill`
+   orders mid-tail refills through the shared `Runtime._pump`, and the
+   engine's lane observables (`masked_forward_fraction`,
+   `slot_busy_fraction`) are maintained on `NodeState` at this fidelity too
+   (masked forwards are 0 by construction; see `_iterate`).
 """
 from __future__ import annotations
 
@@ -136,13 +144,22 @@ class ClusterSimulator(Runtime):
         free KV slot (finite only when declared) and enough token headroom
         for the work's context. Work that can never fit fails loudly."""
         st = self.nodes[node_id].state
-        if adm.need_tokens > st.kv_capacity_tokens:
+        if self._never_fits(node_id, adm):
+            # mirror the engine's (and SlotKVCache.acquire()'s) message
+            # style: name the conversation, the node, and the headroom it
+            # could never fit into — at offer time, not from a later pump
             raise RuntimeError(
-                f"conversation {adm.cid} needs {adm.need_tokens} KV tokens "
-                f"but node {node_id} holds {st.kv_capacity_tokens}; no "
-                f"amount of queueing can admit it")
+                f"conversation {adm.cid} can never fit on node {node_id}: "
+                f"needs {adm.need_tokens} KV tokens but the node holds "
+                f"{st.kv_capacity_tokens} total ({st.used_slots}/"
+                f"{st.slot_capacity} slots used, {st.kv_headroom_tokens} KV "
+                f"tokens of headroom); no amount of queueing or refill can "
+                f"admit it")
         return (st.alive and st.free_slots > 0
                 and st.kv_headroom_tokens >= adm.need_tokens)
+
+    def _never_fits(self, node_id: int, adm: Admission) -> bool:
+        return adm.need_tokens > self.nodes[node_id].state.kv_capacity_tokens
 
     def _reserve(self, st: NodeState, need_tokens: int):
         """Admitted work holds its slot + token reservation until the KV
@@ -441,6 +458,16 @@ class ClusterSimulator(Runtime):
                 ema = node.state.observed_tbt_ema_s
                 node.state.observed_tbt_ema_s = (0.9 * ema + 0.1 * dur) \
                     if ema else dur
+                # rotation observables, mirroring the engine's lane-step
+                # counters: the cost model emits one token per live job per
+                # iteration and jobs leave the batch the moment they finish,
+                # so the simulator is structurally already a continuous
+                # rotation — every emitting lane-step is live
+                # (masked_forward_fraction == 0 by construction) and
+                # slot_busy_fraction tracks batch over declared slots
+                node.state.decode_scan_steps += 1
+                node.state.decode_lane_steps_emitting += batch
+                node.state.decode_lane_steps_live += batch
             # consume prefill chunk
             left = chunk
             for j in list(prefilling):

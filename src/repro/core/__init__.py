@@ -1,6 +1,6 @@
 from .conversation import Conversation, ConversationView, Turn, TurnView, view_of
 from .scheduler import Placement, Scheduler, SCHEDULERS, make_scheduler
-from .conserve import ConServeScheduler
+from .conserve import ConServeRebalanceScheduler, ConServeScheduler
 from .baselines import AMPDScheduler, CollocatedScheduler, FullDisaggScheduler
 from .signals import ClusterView, NodeState, PrefillLatencyCurve
 from .runtime import (Admission, AdmissionQueue, Runtime, ServeSession,

@@ -48,3 +48,34 @@ class ConServeScheduler(Scheduler):
 
     def on_conversation_end(self, cid: int, view: ClusterView) -> None:
         self._bindings.pop(cid, None)
+
+
+@register
+class ConServeRebalanceScheduler(ConServeScheduler):
+    """ConServe + occupancy-aware admission re-offer (ROADMAP open item).
+
+    The base policy is unchanged — one-shot binding to the min-KV decoder,
+    pinned tail — but a one-shot KV binding PARKED on a saturated decoder is
+    re-offered to the eligible decoder with the most observed KV headroom
+    (`kv_headroom_tokens`, with a free slot) instead of waiting FIFO behind
+    that decoder's own releases. Both inputs are observables the runtime
+    already maintains; nothing is predicted. Only decode-role queues are
+    touched: a parked admission on a prefill/mixed node is an arrival, not a
+    binding, and stays where the placement decision put it."""
+    name = "conserve_rebalance"
+
+    def reoffer_admission(self, cid: int, node_id: int,
+                          view: ClusterView):
+        if view.node(node_id).role != "decode":
+            return None
+        eligible = [d for d in view.nodes("decode") if d.free_slots > 0]
+        if not eligible:
+            return None
+        best = max(eligible,
+                   key=lambda d: (d.kv_headroom_tokens, -d.node_id))
+        here = view.node(node_id)
+        if best.node_id != node_id and (
+                here.free_slots <= 0
+                or best.kv_headroom_tokens > here.kv_headroom_tokens):
+            return Placement(best.node_id, kv_transfer=True)
+        return None

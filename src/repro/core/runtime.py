@@ -123,10 +123,17 @@ class Admission:
     need_tokens: int           # KV tokens the work lands with (headroom ask)
     ready: Callable[[int], None]
     kind: str = "bind"         # "arrival" | "bind" | "turn"
+    # set the first time this admission parks: one admission counts at most
+    # once toward n_deferred_admissions even if a reoffer policy later
+    # moves it to another node that also parks it
+    deferred: bool = False
 
 
 class AdmissionQueue:
-    """Per-node FIFO of admissions waiting for a free KV slot / headroom."""
+    """Per-node queue of admissions waiting for a free KV slot / headroom.
+    FIFO by default; `Scheduler.select_refill` may name a different cid to
+    admit first (mid-tail rotation refill), so arbitrary-position peek and
+    removal are part of the contract."""
 
     def __init__(self, node_id: int):
         self.node_id = node_id
@@ -135,15 +142,25 @@ class AdmissionQueue:
     def __len__(self) -> int:
         return len(self._q)
 
-    @property
-    def head(self) -> Admission:
-        return self._q[0]
-
     def push(self, adm: Admission):
         self._q.append(adm)
 
-    def pop(self) -> Admission:
-        return self._q.popleft()
+    def cids(self) -> List[int]:
+        """Waiting conversation ids, FIFO order (the select_refill input)."""
+        return [a.cid for a in self._q]
+
+    def peek(self, cid: int) -> Admission:
+        """The first waiting admission for `cid` (a conversation has at most
+        one admission in flight at a time)."""
+        for a in self._q:
+            if a.cid == cid:
+                return a
+        raise KeyError(f"cid {cid} is not waiting on node {self.node_id}")
+
+    def remove(self, cid: int) -> Admission:
+        adm = self.peek(cid)
+        self._q.remove(adm)
+        return adm
 
     def drain(self) -> List[Admission]:
         out = list(self._q)
@@ -194,6 +211,14 @@ class Runtime(abc.ABC):
     def _can_admit(self, node_id: int, adm: Admission) -> bool:
         ...
 
+    def _never_fits(self, node_id: int, adm: Admission) -> bool:
+        """True when `adm` can NEVER fit on `node_id` no matter how much
+        occupancy frees (backend capacity bound). Backends override; the
+        base conservatively says False. Used to veto a reoffer policy's
+        move: work legally waiting on its origin must not be relocated
+        somewhere the loud never-fits check would kill the serve."""
+        return False
+
     def _make_session(self, cid: int, arrival_s: float) -> ServeSession:
         sess = ServeSession(cid=cid, arrival_s=arrival_s)
         self.sessions[cid] = sess
@@ -214,27 +239,54 @@ class Runtime(abc.ABC):
             return True
         q.push(adm)
         self.view.node(node_id).queued_conversations += 1
-        # structural backpressure count (independent of measured timings)
-        self.n_deferred_admissions = getattr(
-            self, "n_deferred_admissions", 0) + 1
+        # structural backpressure count (independent of measured timings);
+        # an admission re-parked by a reoffer move does not count twice
+        if not adm.deferred:
+            adm.deferred = True
+            self.n_deferred_admissions = getattr(
+                self, "n_deferred_admissions", 0) + 1
         sess = self.sessions.get(adm.cid)
         if sess is not None:
             sess.transition(QUEUED, now)
         return False
 
     def _pump(self, node_id: int, now: float):
-        """Re-offer parked work after `node_id` freed capacity. The scheduler
-        gets a defer/re-offer decision point per admission: returning a
-        Placement moves the waiting work to another node's queue; the default
-        (None) admits here, FIFO."""
+        """Re-offer parked work on `node_id` — at every release point, and
+        (on rotating backends) at every decode chunk cut. Two scheduler
+        decision points, both defaulting to the unmodified FIFO behavior:
+
+        * `select_refill` picks WHICH waiting conversation to try first
+          (default: the queue head);
+        * `reoffer_admission` may move that admission to another node
+          (default: stay). It is consulted before the capacity check, so a
+          policy can drain a still-full node's queue toward idle peers.
+
+        Admission stops at the first selected conversation this node cannot
+        take (head-of-line semantics under FIFO; a reordering policy picks
+        its own head)."""
         q = self._admission[node_id]
-        while len(q) and self._can_admit(node_id, q.head):
-            adm = q.pop()
-            self.view.node(node_id).queued_conversations -= 1
+        st = self.view.node(node_id)
+        while len(q):
+            cids = q.cids()
+            order = self.sched.select_refill(node_id, list(cids), self.view)
+            cid = cids[0]
+            if order:
+                cid = next((c for c in order if c in cids), cids[0])
+            adm = q.peek(cid)
             pl = self.sched.reoffer_admission(adm.cid, node_id, self.view)
-            if pl is not None and pl.node_id != node_id:
+            if pl is not None and pl.node_id != node_id \
+                    and not self._never_fits(pl.node_id, adm):
+                # the hook sees only (cid, node, view) — the mechanism, not
+                # the policy, guards against moving work somewhere it could
+                # never fit (heterogeneous capacities)
+                q.remove(cid)
+                st.queued_conversations -= 1
                 self._offer(pl.node_id, adm, now)
                 continue
+            if not self._can_admit(node_id, adm):
+                break
+            q.remove(cid)
+            st.queued_conversations -= 1
             adm.ready(node_id)
 
     # ----- shared observables -----------------------------------------------

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 from .conversation import ConversationView, TurnView
 from .signals import ClusterView
@@ -59,11 +59,30 @@ class Scheduler(abc.ABC):
                           view: ClusterView) -> Optional[Placement]:
         """Optional defer/re-offer decision point (repro.core.runtime).
 
-        Called when `node_id` freed capacity and conversation `cid` is at the
-        head of its admission queue. Return None (the default) to admit on
-        `node_id` now — FIFO, no policy involvement, which keeps ConServe and
-        the baselines pure over ClusterView — or a Placement naming a
-        different node to move the waiting work there instead."""
+        Called whenever `node_id` re-offers its admission queue (every
+        release point, plus every decode-rotation chunk cut) with `cid` the
+        next conversation `select_refill` picked — consulted BEFORE the
+        capacity check, so a policy can drain a still-full node's queue
+        toward idle peers. Return None (the default) to admit on `node_id`
+        when it has capacity — FIFO, no policy involvement, which keeps
+        ConServe and the baselines pure over ClusterView — or a Placement
+        naming a different node to move the waiting work there instead."""
+        return None
+
+    def select_refill(self, node_id: int, waiting: List[int],
+                      view: ClusterView) -> Optional[List[int]]:
+        """Optional mid-tail refill ordering decision point.
+
+        Called whenever `node_id` re-offers its admission queue — at every
+        release point and at every decode-rotation chunk cut. `waiting` is
+        the queue's conversation ids in FIFO order. Return None (the
+        default) to refill strictly FIFO — no policy involvement, which
+        keeps ConServe and the baselines pure over ClusterView — or a
+        reordered list of cids naming the admission order to try instead
+        (cids not in `waiting` are ignored; an empty list falls back to
+        FIFO). Token streams are keyed per (cid, turn), so any refill
+        ordering produces byte-identical per-conversation output — the
+        hook decides WHEN work runs, never WHAT it computes."""
         return None
 
     # -- shared helpers -------------------------------------------------------

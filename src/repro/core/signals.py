@@ -66,6 +66,17 @@ class NodeState:
     queued_conversations: int = 0
     used_slots: int = 0
     reserved_kv_tokens: int = 0
+    # decode-rotation observables: how well the decode iterations keep their
+    # batch lanes busy. `decode_scan_steps` counts scan steps the node ran
+    # (every lane computes in lockstep per step), `decode_lane_steps_emitting`
+    # counts lane-steps that belonged to an EMITTING slot (live + the masked
+    # no-op tail a slot spends frozen after finishing mid-chunk), and
+    # `decode_lane_steps_live` counts lane-steps that emitted a real token.
+    # All three are counters of work the runtime already dispatched —
+    # observations, never predictions; both backends maintain them.
+    decode_scan_steps: int = 0
+    decode_lane_steps_emitting: int = 0
+    decode_lane_steps_live: int = 0
     # health (observation-based straggler signal)
     observed_tbt_ema_s: float = 0.0
     alive: bool = True
@@ -84,6 +95,27 @@ class NodeState:
         minus reservations of admitted-in-flight work."""
         return (self.kv_capacity_tokens - self.active_kv_tokens
                 - self.reserved_kv_tokens)
+
+    @property
+    def masked_forward_fraction(self) -> float:
+        """Fraction of this node's dispatched decode forwards that were
+        masked no-ops: lane-steps spent on an emitting slot AFTER its
+        per-slot share was exhausted (a slot finishing at step 3 of a
+        32-step scan contributes 29 here). The quantity decode rotation
+        exists to reclaim; 0.0 when the node never decoded."""
+        if self.decode_lane_steps_emitting <= 0:
+            return 0.0
+        return 1.0 - (self.decode_lane_steps_live
+                      / self.decode_lane_steps_emitting)
+
+    @property
+    def slot_busy_fraction(self) -> float:
+        """Mean fraction of this node's KV slots that emitted a real token
+        per executed scan step — lane occupancy including empty lanes, the
+        saturation view of the same counters. 0.0 when the node never
+        decoded."""
+        denom = self.decode_scan_steps * max(self.slot_capacity, 1)
+        return self.decode_lane_steps_live / denom if denom > 0 else 0.0
 
 
 class ClusterView:

@@ -99,6 +99,11 @@ class ReplicaEngine:
                                  for k in cfg.block_pattern)
         self.compute_s = 0.0  # accumulated measured compute time
         self.compile_s = 0.0  # fused decode AOT compile time (kept OUT of dt)
+        self.decode_s = 0.0   # decode-only share of compute_s: the
+        #                       denominator of EFFECTIVE decode tokens/s
+        #                       (n_decode_tokens / decode_s) — masked no-op
+        #                       forwards and dispatch overhead both land
+        #                       here, so the rotation win is measurable
         self.n_prefill_tokens = 0
         self.n_decode_tokens = 0
 
@@ -299,7 +304,21 @@ class ReplicaEngine:
         (sampled (max(remaining), n_slots) int32 matrix in step order —
         rows >= remaining[s] are dead for slot s — and measured execution
         seconds; AOT compile time is charged to `self.compile_s`, never to
-        the returned dt)."""
+        the returned dt).
+
+        SPLIT-CHUNK CONTRACT (what the server's rotation loop relies on):
+        `decode_steps` is callable back-to-back on the same donated cache,
+        and slots may JOIN between calls — a slot prefilled (or imported)
+        after call k participates in call k+1 exactly as if the whole
+        sequence had been one dispatch schedule from the start. This is
+        sound by construction, not by convention: each lane's math reads
+        only its own slot's cache row and length, a frozen/inactive lane's
+        row is select-guarded to byte-identity (`fold_decode_step`), and
+        per-slot lengths advance by exactly the consumed share — so ANY
+        partition of a turn's remaining tokens into chunk cuts, interleaved
+        with other slots joining or finishing, yields byte-identical
+        per-slot tokens and cache state (locked down by the rotation
+        hypothesis property in tests/test_scheduler_properties.py)."""
         emit_mask = np.asarray(emit_mask, bool)
         rem = self._remaining_vector(emit_mask, remaining)
         n_max = int(rem.max()) if emit_mask.any() else 1
@@ -319,6 +338,7 @@ class ReplicaEngine:
         self.kv.lengths += np.where(emit_mask, rem, 0).astype(np.int32)
         dt = time.perf_counter() - t0
         self.compute_s += dt
+        self.decode_s += dt
         self.n_decode_tokens += int(rem[emit_mask].sum())
         return seq, dt
 
@@ -344,5 +364,6 @@ class ReplicaEngine:
         self.kv.append_step(updates, emit_mask)
         dt = time.perf_counter() - t0
         self.compute_s += dt
+        self.decode_s += dt
         self.n_decode_tokens += int(emit_mask.sum())
         return self.sample(logits), dt

@@ -18,9 +18,27 @@ KV slot the work parks in that node's admission queue (session -> QUEUED,
 `NodeState.queued_conversations` observable) and is re-offered when a
 conversation ends and frees its slot — backpressure instead of the old
 `"no free KV slots"` crash, with `Scheduler.reoffer_admission` as the
-optional policy hook. The decode tail itself (ragged donated-KV scan,
-mid-chunk finish events) is byte-for-byte the contract documented in
-ROADMAP "Serving runtime".
+optional policy hook.
+
+The decode tail runs as a CONTINUOUS ROTATION over each node's KV slots
+(`rotation=True`, the default): every `_iterate` call is one chunk cut.
+At the cut the loop first merges READY turns — completed prefills and
+post-tool next-turns of conversations already pinned to the node — into
+the batch, then re-offers the node's admission queue (so parked sessions
+leave QUEUED mid-tail, at the cut where a slot actually freed, ordered by
+`Scheduler.select_refill`, default FIFO). Chunks are sized adaptively:
+with refill supply observed waiting (admission-queue depth, staged ready
+turns) the chunk is cut at the earliest in-flight finish horizon
+(bucket-floored min(remaining) — every lane stays live to the cut, zero
+masked forwards, and the freed slot turns around immediately); with no
+supply the chunk runs to bucket-floored max(remaining) exactly as before
+(raggedness absorbs the stagger; cutting early would only buy dispatch
+overhead). `rotation=False` preserves the chunk-boundary-only admission
+behavior (refills ride the event heap and join one full chunk late) as
+the measurable baseline. Either way the scan itself is byte-for-byte the
+ragged donated-KV contract documented in ROADMAP "Serving runtime", and
+per-(cid, turn) token streams are identical across rotation on/off and
+any refill ordering.
 """
 from __future__ import annotations
 
@@ -59,14 +77,29 @@ class EngineServer(Runtime):
     def __init__(self, scheduler: Scheduler, replicas: List[ReplicaEngine],
                  link_bw_bytes_s: float = 25e9, seed: int = 0,
                  max_decode_chunk: int = 32, decode_mode: str = "fused",
-                 record_tokens: bool = False, strict_accounting: bool = False):
+                 record_tokens: bool = False, strict_accounting: bool = False,
+                 rotation: bool = True, rotation_min_chunk: int = 16):
         """decode_mode: "fused" runs up to `max_decode_chunk` tokens per
         dispatch through the donated in-place RAGGED scan (`decode_steps`):
-        the chunk is sized from the longest remaining turn, each slot
-        consumes only its own per-slot share, and turns that exhaust their
-        output mid-chunk finish at interpolated timestamps. "reference"
-        replays the pre-fusion one-dispatch-per-token path (kept for parity
-        tests and before/after benchmarks).
+        each slot consumes only its own per-slot share, and turns that
+        exhaust their output mid-chunk finish at interpolated timestamps.
+        "reference" replays the pre-fusion one-dispatch-per-token path
+        (kept for parity tests and before/after benchmarks).
+        rotation: True (default) runs the decode tail as a continuous
+        rotation — adaptive chunk cuts at observed finish horizons, ready
+        turns and parked admissions refilled INTO the batch at every cut
+        (see the module docstring). False preserves the chunk-boundary-only
+        admission behavior as the comparison baseline; token streams are
+        identical either way.
+        rotation_min_chunk: shortest chunk (in scan steps) a refill cut may
+        produce while longer work remains in the batch — a lane that
+        finishes below it freezes briefly instead of forcing a cut, so
+        per-dispatch overhead stays amortized (each dispatch costs a few
+        scan steps' time; cutting at every tiny finish horizon re-creates
+        the retired min-collapse pathology). Tune to the measured
+        dispatch-overhead/step-cost ratio of the deployment; the default 16
+        suits this container (CPU dispatch ~3-4 scan steps' worth). Chunk
+        SIZING never changes token content — only when work runs.
         record_tokens: keep every sampled token per (cid, turn) in
         `sampled_tokens` — O(total output tokens) memory, tests only.
         strict_accounting: at every conversation end, assert the NodeState
@@ -83,6 +116,9 @@ class EngineServer(Runtime):
         self.decode_mode = decode_mode
         self.record_tokens = record_tokens
         self.strict_accounting = strict_accounting
+        self.rotation = rotation
+        self.rotation_min_chunk = max(1, min(int(rotation_min_chunk),
+                                             self.max_decode_chunk))
         self.seed = seed
         states = {}
         for r in replicas:
@@ -105,6 +141,16 @@ class EngineServer(Runtime):
         self._slots: Dict[int, Tuple[int, int]] = {}  # cid -> (node, slot)
         self._decode_q: Dict[int, List[_TurnTask]] = {
             r.replica_id: [] for r in replicas}
+        # rotation staging: ready turns (prefill done) waiting to merge
+        # into the node's batch at the next chunk cut, as (ready_t, seq,
+        # task) — seq keeps merge order deterministic at equal timestamps
+        self._ready: Dict[int, List[Tuple[float, int, _TurnTask]]] = {
+            r.replica_id: [] for r in replicas}
+        # logical time of the pending _iterate event per node (None = no
+        # cut scheduled); lets refills kick an idle rotation awake without
+        # flooding the heap with duplicate cut events
+        self._iter_at: Dict[int, Optional[float]] = {
+            r.replica_id: None for r in replicas}
         self._events: List[Tuple[float, int, object]] = []
         self._seq = itertools.count()
         self._now = 0.0
@@ -162,12 +208,22 @@ class EngineServer(Runtime):
         for work that can never fit, which must fail loudly, not queue
         forever."""
         node = self.replicas[node_id]
-        if adm.need_tokens > node.kv.max_ctx:
+        if self._never_fits(node_id, adm):
+            # mirror SlotKVCache.acquire()'s message style: name the
+            # conversation, the node, and the slot headroom it could never
+            # fit into — a refill candidate that cannot EVER fit must fail
+            # loudly at offer time, not rot in the queue
             raise RuntimeError(
-                f"conversation {adm.cid} needs {adm.need_tokens} KV tokens "
-                f"but replica {node_id} slots hold max_ctx="
-                f"{node.kv.max_ctx}; no amount of queueing can admit it")
+                f"conversation {adm.cid} can never fit on replica "
+                f"{node_id}: needs {adm.need_tokens} KV tokens but every "
+                f"slot holds max_ctx={node.kv.max_ctx} "
+                f"({int(node.kv.active.sum())}/{node.kv.n_slots} slots "
+                f"active, {node.kv.active_kv_tokens} live KV tokens); no "
+                f"amount of queueing or refill can admit it")
         return bool((~node.kv.active).any())
+
+    def _never_fits(self, node_id: int, adm: Admission) -> bool:
+        return adm.need_tokens > self.replicas[node_id].kv.max_ctx
 
     def check_accounting(self):
         """Assert every NodeState observable mirrors its replica's KV ground
@@ -272,30 +328,112 @@ class EngineServer(Runtime):
         self.sessions[conv.cid].node_id = node_id
         st = self.states[node_id]
         st.active_conversations += 1
-        self._push(t, lambda: self._begin_decode(conv, 0, next_tok, t))
+        self._begin_decode(conv, 0, next_tok, t)
 
     # ----- decode ---------------------------------------------------------------------
-    def _begin_decode(self, conv, turn_idx, next_tok, arrival_t):
+    def _begin_decode(self, conv, turn_idx, next_tok, ready_t,
+                      arrival_t=None):
+        """A turn's prefill completed at logical time `ready_t`: hand it to
+        the bound node's decode rotation (`arrival_t`, default ready_t, is
+        when the turn became RUNNABLE — tool returned / conversation
+        arrived — and feeds its TTFT). Under rotation the task STAGES
+        immediately (host-side) and merges into the batch at the first
+        chunk cut whose start covers ready_t — no event-heap round trip, so
+        a refill never misses the next chunk. With rotation off it rides
+        the event heap exactly as before: the task lands in the queue when
+        its event fires and joins at the following chunk boundary (the
+        chunk-boundary-only admission baseline)."""
         node_id, slot = self._slots[conv.cid]
         sess = self.sessions[conv.cid]
         sess.turn_idx = turn_idx
-        sess.transition(DECODING, self._now)
+        sess.transition(DECODING, ready_t)
         task = _TurnTask(conv=conv, turn_idx=turn_idx, slot=slot,
                          remaining=conv.turns[turn_idx].output_tokens,
-                         next_token=next_tok, arrival_t=arrival_t)
+                         next_token=next_tok,
+                         arrival_t=ready_t if arrival_t is None else arrival_t)
         if self.record_tokens:
             self.sampled_tokens[(conv.cid, turn_idx)] = [next_tok]
+        if self.rotation:
+            self._ready[node_id].append((ready_t, next(self._seq), task))
+            self._kick(node_id, ready_t)
+        else:
+            self._push(ready_t, lambda: self._enqueue_task(node_id, task))
+
+    def _enqueue_task(self, node_id: int, task: _TurnTask):
+        """Legacy (rotation=False) join: at the event time, append to the
+        decode queue; the task is batched from the next chunk boundary on."""
         q = self._decode_q[node_id]
         q.append(task)
         if len(q) == 1:
             self._push(max(self._now, self.clock[node_id]),
                        lambda: self._iterate(node_id))
 
+    def _kick(self, node_id: int, t: float):
+        """Schedule a chunk cut at logical time >= t unless one is already
+        pending no later than t (duplicate cut events are harmless — the
+        clock serializes chunks — but pointless)."""
+        t = max(t, self._now)
+        at = self._iter_at[node_id]
+        if at is not None and at <= t:
+            return
+        self._iter_at[node_id] = t
+        self._push(t, lambda: self._iterate(node_id))
+
+    def _merge_ready(self, node_id: int, start: float):
+        """Refill supply #1: merge staged ready turns (completed prefills /
+        post-tool next-turns of conversations pinned here) whose ready time
+        is covered by the chunk start, in (ready_t, seq) order."""
+        staged = self._ready[node_id]
+        if not staged:
+            return
+        staged.sort()
+        join = [s for s in staged if s[0] <= start]
+        if not join:
+            return
+        self._ready[node_id] = staged[len(join):]
+        self._decode_q[node_id].extend(task for _, _, task in join)
+
+    def _refill_supply(self, node_id: int) -> bool:
+        """Observed refill supply at a chunk cut: conversations parked in
+        this node's admission queue, or staged ready turns not yet coverable
+        by the chunk start (e.g. an in-flight remote-turn return). Both are
+        state the runtime already owns — queue depth and staged work are
+        observations; nothing predicts WHEN a tool returns."""
+        return (self.states[node_id].queued_conversations > 0
+                or bool(self._ready[node_id]))
+
     def _iterate(self, node_id: int):
         node = self.replicas[node_id]
-        q = self._decode_q[node_id]
-        if not q:
-            return
+        if self.rotation:
+            # one chunk cut: refill the batch from both supplies before
+            # sizing the chunk. Suppress re-kicks while cutting — staging
+            # during the merge below must not spawn duplicate cut events.
+            self._iter_at[node_id] = self._now
+            start = max(self._now, self.clock[node_id])
+            self._merge_ready(node_id, start)          # supply 1: ready turns
+            if len(self._admission[node_id]):
+                # supply 2: parked admissions — sessions leave QUEUED at
+                # the cut (mid-tail), ordered by Scheduler.select_refill;
+                # an admitted arrival prefills inline (advancing the node
+                # clock) and stages, so the second merge batches it.
+                # Pumped even with every slot busy: reoffer policies are
+                # entitled to drain a still-full node's queue toward idle
+                # peers at every cut (the default FIFO breaks immediately)
+                self._pump(node_id, self._now)
+                start = max(start, self.clock[node_id])
+                self._merge_ready(node_id, start)
+            q = self._decode_q[node_id]
+            if not q:
+                self._iter_at[node_id] = None
+                staged = self._ready[node_id]
+                if staged:  # future-ready work only: cut again when it lands
+                    self._kick(node_id, min(s[0] for s in staged))
+                return
+            start = max(start, self.clock[node_id])
+        else:
+            q = self._decode_q[node_id]
+            if not q:
+                return
         n_slots = node.kv.n_slots
         next_tokens = np.zeros(n_slots, np.int32)
         emit = np.zeros(n_slots, bool)
@@ -317,7 +455,8 @@ class EngineServer(Runtime):
                     f"with {task.remaining} output tokens remaining")
             # floor 1 covers zero-output turns — pre-PR decoded one there
             rem[s] = max(1, min(task.remaining, self.max_decode_chunk, room))
-        start = max(self._now, self.clock[node_id])
+        if not self.rotation:
+            start = max(self._now, self.clock[node_id])
 
         if self.decode_mode == "reference":
             n = 1
@@ -325,18 +464,36 @@ class EngineServer(Runtime):
             sampled, dt = node.decode_step_all_reference(next_tokens, emit)
             seq = sampled[None]
         else:
-            # ragged chunk, sized from the LONGEST remaining task (largest
-            # compiled bucket <= max(remaining) so the scan runs at exactly
-            # its compiled length): a nearly-finished slot freezes mid-scan
-            # while its neighbors run on, instead of collapsing the chunk
-            # to min(remaining) for the whole batch
-            n = decode_chunk_floor(int(rem[emit].max()))
+            if self.rotation and self._refill_supply(node_id):
+                # rotation under pressure: cut at the earliest OBSERVED
+                # in-flight finish horizon (bucket-floored min(remaining)),
+                # floored at rotation_min_chunk so per-dispatch overhead
+                # stays amortized — a lane finishing below the floor
+                # freezes for at most (floor - remaining) steps, and the
+                # freed slot turns around into waiting work at the cut
+                # instead of idling to the batch's longest tail
+                lo, hi = int(rem[emit].min()), int(rem[emit].max())
+                n = decode_chunk_floor(
+                    max(lo, min(hi, self.rotation_min_chunk)))
+            else:
+                # no refill supply (or rotation off): ragged chunk sized
+                # from the LONGEST remaining task — a nearly-finished slot
+                # freezes mid-scan while its neighbors run on; cutting
+                # early here would only buy dispatch overhead, since no
+                # waiting work could use the freed lane
+                n = decode_chunk_floor(int(rem[emit].max()))
             rem = np.minimum(rem, n)
             seq, dt = node.decode_steps(next_tokens, emit, rem)
         t_done = start + dt
         per_tok = dt / n
         self.clock[node_id] = t_done
         st = self.states[node_id]
+        # rotation observables: lane-step counters of the dispatch that just
+        # ran (scan computes every slot in lockstep for n steps; an emitting
+        # slot is live for its own rem share, a masked no-op after)
+        st.decode_scan_steps += n
+        st.decode_lane_steps_emitting += n * int(emit.sum())
+        st.decode_lane_steps_live += int(rem[emit].sum())
         ema = st.observed_tbt_ema_s
         st.observed_tbt_ema_s = 0.9 * ema + 0.1 * per_tok if ema else per_tok
 
@@ -361,11 +518,18 @@ class EngineServer(Runtime):
                 t_fin = start + took * per_tok
                 self._push(t_fin, lambda task=task, t=t_fin:
                            self._finish_turn(task, t))
-        # rebuild the queue once per iteration (not O(n) removes per finish);
-        # newly-ready turns admitted by _begin_decode join at the next chunk
-        # boundary
+        # rebuild the queue once per iteration (not O(n) removes per finish)
         self._decode_q[node_id] = q = [t for t in q if t.remaining > 0]
-        if q:
+        if self.rotation:
+            # schedule the next cut; finish events above land first (their
+            # interpolated times are <= t_done), so releases pump the
+            # admission queue and post-tool turns stage before the cut
+            self._iter_at[node_id] = None
+            if q or self._ready[node_id]:
+                self._kick(node_id, t_done)
+        elif q:
+            # chunk-boundary baseline: newly-ready turns join at the NEXT
+            # boundary after their event lands
             self._push(t_done, lambda: self._iterate(node_id))
 
     def _finish_turn(self, task: _TurnTask, t: float):
@@ -415,9 +579,8 @@ class EngineServer(Runtime):
             next_tok, dt = node.append_prefill(slot, tokens)
             self.clock[node_id] = start + dt
             self.states[node_id].active_kv_tokens += len(tokens)
-            self._push(start + dt,
-                       lambda: self._begin_decode(conv, idx, int(next_tok),
-                                                  ready_t))
+            self._begin_decode(conv, idx, int(next_tok), start + dt,
+                               arrival_t=ready_t)
             return
         # remote append-prefill needs a temporary slot on the remote node —
         # that acquisition passes admission like every other one
@@ -463,5 +626,4 @@ class EngineServer(Runtime):
         self.clock[remote_id] = t0 + dt
         self.states[node_id].active_kv_tokens += len(tokens)
         self._pump(remote_id, self._now)
-        self._push(done, lambda: self._begin_decode(conv, idx, int(next_tok),
-                                                    ready_t))
+        self._begin_decode(conv, idx, int(next_tok), done, arrival_t=ready_t)

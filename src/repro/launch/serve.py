@@ -45,6 +45,11 @@ def main():
     ap.add_argument("--slots", type=int, default=16,
                     help="engine: KV slots per replica (small values "
                          "exercise admission backpressure)")
+    ap.add_argument("--no-rotation", action="store_true",
+                    help="engine: disable continuous decode rotation "
+                         "(adaptive chunk cuts + mid-tail slot refill) and "
+                         "fall back to chunk-boundary-only admission — the "
+                         "before/after comparison knob")
     args = ap.parse_args()
 
     if args.engine:
@@ -62,7 +67,8 @@ def main():
                               replica_id=0, role="prefill")] + [
             ReplicaEngine(cfg, params, n_slots=args.slots, max_ctx=1024,
                           replica_id=i, role="decode") for i in (1, 2)]
-        srv = EngineServer(make_scheduler(args.scheduler), reps)
+        srv = EngineServer(make_scheduler(args.scheduler), reps,
+                           rotation=not args.no_rotation)
         tc = TraceConfig(first_input_median=150, first_input_max=500,
                          append_median=24, append_max=64, output_median=10,
                          output_max=32, mean_turns=3.0, max_turns=6,

@@ -354,3 +354,35 @@ def test_server_staggered_finish_fused_matches_reference(qwen):
     # output order instead of all landing on the chunk boundary
     fin = [r_fus[cid].turns[0].last_token_s for cid in range(4)]
     assert fin[0] < fin[1] < fin[2] < fin[3]
+
+
+def test_server_rotation_matches_chunk_boundary_staggered(qwen):
+    """Continuous rotation (adaptive chunk cuts + mid-tail refill) must
+    serve the staggered trace with byte-identical per-(cid, turn) token
+    streams and turn records vs the chunk-boundary-only baseline —
+    rotation changes WHEN work runs, never WHAT it computes — while
+    spending no more masked forwards and no more scan steps."""
+    cfg, model, params = qwen
+
+    def run(rotation):
+        rep = ReplicaEngine(cfg, params, n_slots=8, max_ctx=256,
+                            replica_id=0, role="mixed")
+        srv = EngineServer(make_scheduler("conserve"), [rep],
+                           record_tokens=True, strict_accounting=True,
+                           rotation=rotation)
+        recs = srv.serve(_staggered_trace())
+        srv.check_accounting()
+        return srv, {c.cid: c for c in recs}
+
+    s_rot, r_rot = run(True)
+    s_bnd, r_bnd = run(False)
+    assert s_rot.sampled_tokens == s_bnd.sampled_tokens
+    assert sorted(r_rot) == sorted(r_bnd)
+    for cid in r_bnd:
+        a = [(t.turn_idx, t.n_output_tokens) for t in r_bnd[cid].turns]
+        b = [(t.turn_idx, t.n_output_tokens) for t in r_rot[cid].turns]
+        assert a == b
+    st_r, st_b = s_rot.states[0], s_bnd.states[0]
+    assert st_r.decode_lane_steps_live == st_b.decode_lane_steps_live
+    assert st_r.decode_scan_steps <= st_b.decode_scan_steps
+    assert st_r.masked_forward_fraction <= st_b.masked_forward_fraction + 1e-9

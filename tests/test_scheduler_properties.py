@@ -146,11 +146,12 @@ def ragged_pair():
 
     def snap(eng):
         return (jax.tree_util.tree_map(jnp.array, eng.kv.caches),
-                eng.kv.lengths.copy())
+                eng.kv.lengths.copy(), eng.kv.active.copy())
 
     def restore(eng, s):
         eng.kv.caches = jax.tree_util.tree_map(jnp.array, s[0])
         eng.kv.lengths = s[1].copy()
+        eng.kv.active = s[2].copy()
 
     return fus, ref, (snap(fus), snap(ref)), restore, nt
 
@@ -185,6 +186,67 @@ def test_ragged_decode_chunk_token_and_cache_exact(ragged_pair, rems):
 
     for s in np.flatnonzero(emit):
         assert [int(t) for t in seq[: rem[s], s]] == ref_toks[s]
+    np.testing.assert_array_equal(fus.kv.lengths, ref.kv.lengths)
+    for a, b in zip(jax.tree_util.tree_leaves(fus.kv.caches),
+                    jax.tree_util.tree_leaves(ref.kv.caches)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+
+
+# deterministic prompts for slots joining mid-rotation (the rotation
+# engine's refill: a freed slot re-prefills between two decode_steps calls)
+JOIN_TOKENS = (np.arange(55, 66, dtype=np.int32),
+               np.arange(7, 21, dtype=np.int32))
+
+
+@ENGINE_SET
+@given(st.lists(st.tuples(st.integers(1, 6), st.booleans()),
+                min_size=1, max_size=4))
+def test_split_chunk_cuts_and_joins_match_reference_replay(ragged_pair,
+                                                           plan):
+    """PROPERTY (the rotation engine's split-chunk contract): decode_steps
+    called BACK-TO-BACK on the same donated cache — random chunk-cut
+    lengths, ragged per-slot shares, slots JOINING between calls exactly as
+    a mid-tail refill does — is token- and cache-exact against the
+    per-token reference path replayed with the same schedule."""
+    import jax
+    fus, ref, (snap_f, snap_r), restore, nt0 = ragged_pair
+    restore(fus, snap_f)
+    restore(ref, snap_r)
+
+    active = [0, 1]
+    nt_f, nt_r = nt0.copy(), nt0.copy()
+    joins = 0
+    for n, do_join in plan:
+        if do_join and joins < len(JOIN_TOKENS):
+            # a refill joins between two chunk cuts: fresh slot, fresh
+            # prefill, identical on both engines
+            toks = JOIN_TOKENS[joins]
+            sf, sr = fus.kv.acquire(), ref.kv.acquire()
+            assert sf == sr
+            tf, _ = fus.prefill_conversation(sf, toks)
+            tr, _ = ref.prefill_conversation(sr, toks)
+            assert int(tf) == int(tr)
+            nt_f[sf] = nt_r[sr] = int(tf)
+            active.append(sf)
+            joins += 1
+        emit = np.zeros(4, bool)
+        emit[active] = True
+        rem = np.zeros(4, np.int32)
+        for s in active:  # ragged per-slot shares, derived from the draw
+            rem[s] = 1 + (n + s) % 6
+        seq, _ = fus.decode_steps(nt_f, emit, rem)
+        # reference: per-token replay with the same shrinking live mask
+        ref_toks = {s: [] for s in active}
+        for i in range(int(rem.max())):
+            mask = emit & (i < rem)
+            sampled, _ = ref.decode_step_all_reference(nt_r, mask)
+            for s in np.flatnonzero(mask):
+                ref_toks[s].append(int(sampled[s]))
+                nt_r[s] = int(sampled[s])
+        for s in active:
+            assert [int(t) for t in seq[: rem[s], s]] == ref_toks[s]
+            nt_f[s] = int(seq[rem[s] - 1, s])
     np.testing.assert_array_equal(fus.kv.lengths, ref.kv.lengths)
     for a, b in zip(jax.tree_util.tree_leaves(fus.kv.caches),
                     jax.tree_util.tree_leaves(ref.kv.caches)):
