@@ -348,6 +348,17 @@ def decode_tail_bench():
     decode_tail.main(quick=True)
 
 
+def prefill_path_bench():
+    """Prefill-path tokens/s: eager reference vs the AOT-compiled donated
+    (append-)prefill programs, turn-1 and hot-prefix append scenarios
+    (writes BENCH_prefill_path.json at the repo root). Series:
+    `prefill_path_turn1` / `prefill_path_append` (jit vs reference tokens/s
+    and speedups on the bucketed multi-turn trace; compile_s recorded
+    separately and never inside a measured pass)."""
+    from . import prefill_path
+    prefill_path.main(quick=True)
+
+
 def serve_overload_bench():
     """Saturated serving through admission backpressure on both backends
     (writes BENCH_serve_overload.json at the repo root). Series:
@@ -366,4 +377,4 @@ ALL = [fig01_trace_dist, fig02_prefill_curve, fig03_kv_transfer,
        fig04_tbt_heatmap, fig05_collocation, fig06_tbt_variance,
        fig07_powercap_prefill, fig08_powercap_decode, fig10_agentic_perf,
        fig11_cdfs, fig12_wrong_prediction, fig13_hetero, decode_tail_bench,
-       serve_overload_bench]
+       prefill_path_bench, serve_overload_bench]

@@ -1,6 +1,7 @@
 from .conversation import Conversation, ConversationView, Turn, TurnView, view_of
 from .scheduler import Placement, Scheduler, SCHEDULERS, make_scheduler
-from .conserve import ConServeRebalanceScheduler, ConServeScheduler
+from .conserve import (ConServeRebalanceScheduler, ConServeScheduler,
+                       ConServeSJFRefillScheduler)
 from .baselines import AMPDScheduler, CollocatedScheduler, FullDisaggScheduler
 from .signals import ClusterView, NodeState, PrefillLatencyCurve
 from .runtime import (Admission, AdmissionQueue, Runtime, ServeSession,

@@ -79,3 +79,53 @@ class ConServeRebalanceScheduler(ConServeScheduler):
                 or best.kv_headroom_tokens > here.kv_headroom_tokens):
             return Placement(best.node_id, kv_transfer=True)
         return None
+
+
+@register
+class ConServeSJFRefillScheduler(ConServeScheduler):
+    """ConServe + shortest-context-first admission refill (ROADMAP open
+    item: a non-trivial `select_refill`).
+
+    The base policy is unchanged — placement, binding and the pinned tail
+    are verbatim ConServe — but whenever a node re-offers its admission
+    queue (every release point and every decode-rotation chunk cut) the
+    parked conversations are tried SHORTEST OBSERVED CONTEXT first instead
+    of FIFO. A short-context admission holds its slot for the least KV and
+    tends to release it soonest, so draining the queue smallest-first
+    maximizes slot turnover under saturation (classic SJF, applied to slot
+    residency).
+
+    Observation-only: the context a conversation would land with is
+    exactly what the scheduler already SAW at its own decision points —
+    `first_input_len` at arrival, `context_tokens + append_tokens` at each
+    turn arrival — accumulated the same way ConServe accumulates
+    `_bindings`. Nothing decode-side is predicted; a cid this scheduler
+    never saw (nothing arrives that way in practice) keeps its FIFO rank.
+    Refill order changes WHEN parked work runs, never WHAT it computes:
+    per-(cid, turn) token streams are refill-order-invariant by the
+    runtime contract, and the unit tests assert both the reorder and the
+    invariance."""
+    name = "conserve_sjf_refill"
+
+    def __init__(self, straggler_factor: float = 0.0):
+        super().__init__(straggler_factor)
+        self._seen_ctx = {}  # cid -> last context observed at a decision
+
+    def place_first_prefill(self, conv: ConversationView,
+                            view: ClusterView) -> Placement:
+        self._seen_ctx[conv.cid] = conv.first_input_len
+        return super().place_first_prefill(conv, view)
+
+    def place_turn(self, turn: TurnView, bound_decoder: int,
+                   view: ClusterView) -> Placement:
+        self._seen_ctx[turn.cid] = turn.context_tokens + turn.append_tokens
+        return super().place_turn(turn, bound_decoder, view)
+
+    def on_conversation_end(self, cid: int, view: ClusterView) -> None:
+        self._seen_ctx.pop(cid, None)
+        super().on_conversation_end(cid, view)
+
+    def select_refill(self, node_id: int, waiting, view: ClusterView):
+        fifo_rank = {cid: i for i, cid in enumerate(waiting)}
+        return sorted(waiting, key=lambda cid: (
+            self._seen_ctx.get(cid, float("inf")), fifo_rank[cid]))

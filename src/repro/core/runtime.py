@@ -149,6 +149,12 @@ class AdmissionQueue:
         """Waiting conversation ids, FIFO order (the select_refill input)."""
         return [a.cid for a in self._q]
 
+    def admissions(self, kind: Optional[str] = None) -> List[Admission]:
+        """Waiting admissions (optionally filtered by kind), FIFO order —
+        read-only view for accounting checks (strict_accounting asserts
+        each node's backlog observables against exactly this state)."""
+        return [a for a in self._q if kind is None or a.kind == kind]
+
     def peek(self, cid: int) -> Admission:
         """The first waiting admission for `cid` (a conversation has at most
         one admission in flight at a time)."""
@@ -219,6 +225,16 @@ class Runtime(abc.ABC):
         somewhere the loud never-fits check would kill the serve."""
         return False
 
+    def _on_reoffer_move(self, adm: Admission, from_node: int,
+                         to_node: int) -> None:
+        """Hook: a parked admission is being MOVED from `from_node`'s queue
+        to `to_node` by a `reoffer_admission` policy. Backends that maintain
+        per-node backlog observables derived from parked work (the engine's
+        `queued_prefill_tokens`) move them here, at the instant the work
+        changes queues — moving them later (e.g. when the admission finally
+        runs) lets the counter sit on the wrong node for the whole parked
+        interval, which is exactly the drift strict accounting rejects."""
+
     def _make_session(self, cid: int, arrival_s: float) -> ServeSession:
         sess = ServeSession(cid=cid, arrival_s=arrival_s)
         self.sessions[cid] = sess
@@ -281,6 +297,7 @@ class Runtime(abc.ABC):
                 # never fit (heterogeneous capacities)
                 q.remove(cid)
                 st.queued_conversations -= 1
+                self._on_reoffer_move(adm, node_id, pl.node_id)
                 self._offer(pl.node_id, adm, now)
                 continue
             if not self._can_admit(node_id, adm):

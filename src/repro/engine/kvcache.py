@@ -83,6 +83,59 @@ def fold_decode_step(caches, updates, lens, mask, grouped, growing):
     return jax.tree_util.tree_map(fold, caches, updates, grouped, growing)
 
 
+def slice_slot_prefix(caches, slot, ctx: int, grouped, growing):
+    """Pure, jit-safe read of ONE slot's cache rows, with growing entries
+    trimmed to the static `ctx` bucket: growing leaves come back as
+    (…, 1, ctx, …) views of the slot's prefix region, fixed states as the
+    slot's (…, 1, …) row. `slot` may be a traced scalar — this is how the
+    AOT-compiled append-prefill program reads its hot prefix *inside* the
+    donated jit program, replacing the host-side `export_slot_full` copy
+    on the serve path (that method survives as the eager oracle's input).
+    Positions at/beyond the slot's live length hold stale bytes; callers
+    mask them via kv_lens exactly as with the full-buffer view."""
+    def take(leaf, g, gr):
+        if gr:
+            if g:  # (G, B, L, ...) -> (G, 1, ctx, ...)
+                return jax.lax.dynamic_slice(
+                    leaf, (0, slot, 0) + (0,) * (leaf.ndim - 3),
+                    (leaf.shape[0], 1, min(ctx, leaf.shape[2]))
+                    + leaf.shape[3:])
+            return jax.lax.dynamic_slice(  # (B, L, ...) -> (1, ctx, ...)
+                leaf, (slot, 0) + (0,) * (leaf.ndim - 2),
+                (1, min(ctx, leaf.shape[1])) + leaf.shape[2:])
+        if g:  # fixed state, grouped: (G, B, ...) -> (G, 1, ...)
+            return jax.lax.dynamic_slice(
+                leaf, (0, slot) + (0,) * (leaf.ndim - 2),
+                (leaf.shape[0], 1) + leaf.shape[2:])
+        return jax.lax.dynamic_slice(
+            leaf, (slot,) + (0,) * (leaf.ndim - 1), (1,) + leaf.shape[1:])
+
+    return jax.tree_util.tree_map(take, caches, grouped, growing)
+
+
+def fold_prefill(caches, new_caches, slot, offset, grouped, growing):
+    """Pure, jit-safe fold of a (batch=1) prefill result into slot `slot`:
+    growing entries land at [offset, offset+S); fixed states replace the
+    slot's row. Both `slot` and `offset` may be traced scalars — this is
+    the same write `SlotKVCache.write_prefill` performs host-side, hoisted
+    into the AOT-compiled prefill program so the donated cache pytree is
+    scattered in place (zero host-side KV materialization per prefill).
+    The written region may extend past the slot's live length (bucketed
+    token padding); reads are masked via kv_lens, exactly as with the
+    host-side write."""
+    def put(leaf, new_leaf, g, gr):
+        new_leaf = new_leaf.astype(leaf.dtype)
+        if gr:
+            start = ((0, slot, offset) + (0,) * (leaf.ndim - 3) if g
+                     else (slot, offset) + (0,) * (leaf.ndim - 2))
+        else:
+            start = ((0, slot) + (0,) * (leaf.ndim - 2) if g
+                     else (slot,) + (0,) * (leaf.ndim - 1))
+        return jax.lax.dynamic_update_slice(leaf, new_leaf, start)
+
+    return jax.tree_util.tree_map(put, caches, new_caches, grouped, growing)
+
+
 class SlotKVCache:
     """Owns the cache pytree (batch dim = n_slots) plus per-slot lengths."""
 
@@ -142,29 +195,12 @@ class SlotKVCache:
                       state_slot_batch1: bool = True):
         """Install a (batch=1) prefill result into `slot`: growing entries
         are copied into [0(or prev_len), ...); fixed states replace the slot's
-        row. `length` = the slot's total live length afterwards."""
+        row. `length` = the slot's total live length afterwards. Host-side
+        dispatch of the same `fold_prefill` the AOT prefill programs run
+        in-program (this path is the eager oracle's write)."""
         prev = int(self.lengths[slot])
-
-        def write(path, cache_leaf, new_leaf, grouped, growing):
-            if growing:
-                off = prev
-                if grouped:
-                    start = (0, slot, off) + (0,) * (cache_leaf.ndim - 3)
-                else:
-                    start = (slot, off) + (0,) * (cache_leaf.ndim - 2)
-                return jax.lax.dynamic_update_slice(
-                    cache_leaf, new_leaf.astype(cache_leaf.dtype), start)
-            # fixed-size state: replace slot row
-            if grouped:
-                start = (0, slot) + (0,) * (cache_leaf.ndim - 2)
-            else:
-                start = (slot,) + (0,) * (cache_leaf.ndim - 1)
-            return jax.lax.dynamic_update_slice(
-                cache_leaf, new_leaf.astype(cache_leaf.dtype), start)
-
-        self.caches = jax.tree_util.tree_map_with_path(
-            lambda p, c, n, g, gr: write(p, c, n, g, gr),
-            self.caches, new_caches, self._grouped, self._growing)
+        self.caches = fold_prefill(self.caches, new_caches, slot, prev,
+                                   self._grouped, self._growing)
         self.lengths[slot] = length
 
     def append_step(self, updates, emitted_mask: np.ndarray):

@@ -19,7 +19,20 @@ compiled (`jax.jit(...).lower(...).compile()`): compile time accumulates
 in `compile_s` and never pollutes the measured per-chunk `dt` the server
 feeds its logical clock and TBT EMA. `decode_step_all_reference` keeps
 the original one-dispatch-per-token + host-side `append_step` copy path
-as the parity oracle and benchmark baseline."""
+as the parity oracle and benchmark baseline.
+
+The (append-)prefill path (the paper's compute-bound phase, and the
+turn-2+ hot-prefix appends PPD treats as their own latency class) gets
+the same architecture: ONE AOT-compiled donated program per length
+bucket (turn-1) or (length, prefix-ctx) bucket (append). The forward,
+the logits gather at the last live position, greedy sampling, and the
+per-slot KV write (a dynamic-slice scatter into the donated slot cache
+pytree) all run inside the program — one dispatch, zero host-side KV
+materialization, and no `export_slot_full` copy on the append path
+(the prefix is a dynamic slice of the slot's own rows trimmed to its
+ctx bucket). `prefill_mode="reference"` replays the eager per-op path
+as the parity oracle; `warmup_prefill` pre-compiles buckets for cold
+replicas, with compile seconds in `compile_s`, never in measured dt."""
 from __future__ import annotations
 
 import time
@@ -33,12 +46,22 @@ import numpy as np
 from repro.models import Model, build_model
 from repro.models.config import ModelConfig
 
-from .kvcache import SlotKVCache, fold_decode_step
+from .kvcache import (SlotKVCache, fold_decode_step, fold_prefill,
+                      slice_slot_prefix)
 
 PREFILL_BUCKETS = (32, 64, 128, 256, 512, 1024, 2048, 4096)
 
 DECODE_CHUNKS = (1, 2, 4, 8, 16, 32)
 CTX_BUCKET_MIN = 64
+
+# Process-wide AOT prefill program cache. A compiled (append-)prefill
+# executable is a pure function of (model config, cache geometry,
+# attention impl, bucket key) — params and caches are ARGUMENTS — so
+# replicas with identical signatures (every multi-replica deployment, and
+# every engine a test builds) share one compile instead of each paying
+# ~seconds per bucket. compile_s is charged only by the replica that
+# actually compiled (a cache hit costs nothing and charges nothing).
+_AOT_PREFILL_CACHE: Dict[Tuple, Any] = {}
 
 
 def bucket_len(n: int) -> int:
@@ -81,12 +104,24 @@ def ctx_bucket(n: int, max_ctx: int) -> int:
 class ReplicaEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
                  max_ctx: int = 2048, replica_id: int = 0, role: str = "decode",
-                 warmup: bool = False, attention_impl: str = "xla"):
+                 warmup: bool = False, attention_impl: str = "xla",
+                 prefill_mode: str = "jit"):
         """attention_impl: "xla" (default) serves decode attention through the
         pure-jnp model path on every backend; "pallas" routes GQA decode
-        attention through the flash-decode kernel (ops.decode_attention) —
+        attention through the flash-decode kernel (ops.decode_attention) and
+        fresh global-attention prefill through the flash-prefill kernel —
         native on TPU, interpret-mode elsewhere. Threaded statically into the
-        jitted decode programs, so switching never recompiles the jnp path."""
+        jitted programs, so switching never recompiles the jnp path.
+        prefill_mode: "jit" (default) serves (append-)prefill through ONE
+        AOT-compiled donated program per (length-bucket[, ctx-bucket]) — the
+        per-slot KV write is a dynamic-slice scatter INSIDE the program, so
+        a prefill is one dispatch with zero host-side KV materialization.
+        "reference" replays the eager per-op path (host-side `write_prefill`
+        copy; append reads the prefix via `export_slot_full`) — the parity
+        oracle and benchmark baseline. Families the jitted path does not
+        cover (exact-length recurrent prefill, encoder-decoder) fall back
+        to the reference path regardless of the mode."""
+        assert prefill_mode in ("jit", "reference")
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -97,13 +132,21 @@ class ReplicaEngine:
         self.attention_impl = attention_impl
         self.exact_prefill = any(k in ("rwkv6", "rglru")
                                  for k in cfg.block_pattern)
+        self.prefill_mode = prefill_mode
+        # recurrent prefill consumes every position (padding would corrupt
+        # state -> unbounded exact-length recompiles) and encdec lacks the
+        # engine-mode prefill kwargs: both stay on the eager reference path
+        self._prefill_jittable = (not self.exact_prefill
+                                  and not cfg.is_encoder_decoder)
         self.compute_s = 0.0  # accumulated measured compute time
-        self.compile_s = 0.0  # fused decode AOT compile time (kept OUT of dt)
+        self.compile_s = 0.0  # prefill+decode AOT compile time (OUT of dt)
         self.decode_s = 0.0   # decode-only share of compute_s: the
         #                       denominator of EFFECTIVE decode tokens/s
         #                       (n_decode_tokens / decode_s) — masked no-op
         #                       forwards and dispatch overhead both land
         #                       here, so the rotation win is measurable
+        self.prefill_s = 0.0  # prefill-only share of compute_s (the
+        #                       denominator of prefill tokens/s)
         self.n_prefill_tokens = 0
         self.n_decode_tokens = 0
 
@@ -115,6 +158,8 @@ class ReplicaEngine:
         self._fused: Dict[Tuple[int, int], Any] = {}
         if warmup:
             self.warmup_decode()
+            if self._prefill_jittable and prefill_mode == "jit":
+                self.warmup_prefill()
 
     # ----- sampling -------------------------------------------------------------
     def sample(self, logits) -> np.ndarray:
@@ -123,12 +168,203 @@ class ReplicaEngine:
         return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
 
     # ----- prefill ----------------------------------------------------------------
+    def _use_jit_prefill(self) -> bool:
+        return self.prefill_mode == "jit" and self._prefill_jittable
+
+    def _check_prefill_room(self, slot: int, need: int):
+        """The in-slot scatter would clamp at the buffer edge while host
+        lengths advance past it — refuse loudly, naming the slot, in BOTH
+        prefill modes (mirrors the decode_steps overflow guard)."""
+        prev = int(self.kv.lengths[slot])
+        if prev + need > self.kv.max_ctx:
+            raise RuntimeError(
+                f"prefill overflow on replica {self.replica_id}: slot {slot} "
+                f"at length {prev} cannot take {need} more tokens "
+                f"(max_ctx={self.kv.max_ctx})")
+
+    def _prefill_pad(self, true_len: int, room: int) -> int:
+        """Padded token length for a prefill whose slot has `room` positions
+        left. Normally the length bucket — but the scatter writes the FULL
+        padded region at the slot offset, and `dynamic_update_slice` clamps
+        a start that would run off the buffer (silently corrupting the live
+        prefix), so a nearly-full slot whose true length fits but whose
+        bucket does not falls back to an exact-length program (a one-off
+        compile in a regime bucketing cannot serve). Both prefill modes pad
+        identically, keeping caches byte-comparable bit for bit."""
+        pad = bucket_len(true_len)
+        return pad if pad <= room else true_len
+
+    def _build_prefill(self):
+        """Turn-1 prefill program builder (the token bucket and frontend
+        shape are fixed by the .lower() specs at the _get_prefill call
+        site): forward over the padded bucket, logits gathered at the
+        (traced) last live position,
+        greedy argmax ON DEVICE, and the per-slot KV write as a donated
+        dynamic-slice scatter into the slot cache pytree — one dispatch,
+        zero host-side KV materialization. `slot` and `true_len` are traced
+        scalars, so one compiled program serves every slot and every true
+        length inside the bucket."""
+        grouped, growing = self.kv._grouped, self.kv._growing
+        vocab = self.cfg.vocab_size
+
+        def run(params, caches, tokens, slot, true_len, fe):
+            logits, new = self.model.prefill(
+                params, tokens[None], frontend_embeds=fe,
+                logits_at=true_len - 1,
+                attention_impl=self.attention_impl)
+            caches = fold_prefill(caches, new, slot, 0, grouped, growing)
+            tok = jnp.argmax(logits[0, :vocab]).astype(jnp.int32)
+            return caches, tok
+
+        return jax.jit(run, donate_argnums=(1,))
+
+    def _build_append(self, ctx: int):
+        """Append-prefill program for one prefix ctx bucket (the token
+        bucket is fixed by the .lower() specs at the _get_append call site):
+        the hot prefix is a dynamic slice of the slot's own cache rows
+        trimmed to `ctx` (no host-side `export_slot_full` copy), padding
+        past the live length is masked via kv_lens, and the new tokens'
+        KV scatters back into the slot at the (traced) previous length —
+        the donated in-place contract of the fused decode scan, applied to
+        the ConServe fast path."""
+        grouped, growing = self.kv._grouped, self.kv._growing
+        vocab = self.cfg.vocab_size
+
+        def run(params, caches, tokens, slot, true_len, prev_len):
+            prefix = slice_slot_prefix(caches, slot, ctx, grouped, growing)
+            lens = jnp.reshape(prev_len.astype(jnp.int32), (1,))
+            logits, new = self.model.prefill(
+                params, tokens[None], caches=prefix, start_pos=prev_len,
+                kv_lens=lens, prefix_start=0, logits_at=true_len - 1,
+                attention_impl=self.attention_impl)
+            caches = fold_prefill(caches, new, slot, prev_len, grouped,
+                                  growing)
+            tok = jnp.argmax(logits[0, :vocab]).astype(jnp.int32)
+            return caches, tok
+
+        return jax.jit(run, donate_argnums=(1,))
+
+    def _aot_specs(self):
+        spec = lambda x: jax.ShapeDtypeStruct(  # noqa: E731
+            jnp.shape(x), x.dtype)
+        return (jax.tree_util.tree_map(spec, self.params),
+                jax.tree_util.tree_map(spec, self.kv.caches))
+
+    def _prefill_cache_key(self, kind: str, *bucket) -> Tuple:
+        """Process-wide cache key: everything the compiled executable is a
+        function of besides its runtime arguments. cfg repr covers params
+        and cache pytree structure; (n_slots, max_ctx) cover geometry."""
+        return (repr(self.cfg), self.kv.n_slots, self.kv.max_ctx,
+                self.attention_impl, kind, *bucket)
+
+    def _get_prefill(self, pad_to: int, n_front: int):
+        """Fetch (or AOT-compile) the turn-1 program for one token bucket.
+        Compile time goes to `self.compile_s`, never into measured dt."""
+        key = self._prefill_cache_key("prefill", pad_to, n_front)
+        fn = _AOT_PREFILL_CACHE.get(key)
+        if fn is None:
+            t0 = time.perf_counter()
+            pspec, cspec = self._aot_specs()
+            scalar = jax.ShapeDtypeStruct((), jnp.int32)
+            fe_spec = None if not n_front else jax.ShapeDtypeStruct(
+                (1, n_front, self.cfg.d_model), self.cfg.jnp_dtype)
+            fn = self._build_prefill().lower(
+                pspec, cspec, jax.ShapeDtypeStruct((pad_to,), jnp.int32),
+                scalar, scalar, fe_spec).compile()
+            self.compile_s += time.perf_counter() - t0
+            _AOT_PREFILL_CACHE[key] = fn
+        return fn
+
+    def _get_append(self, pad_to: int, ctx: int):
+        """Fetch (or AOT-compile) the append program for one (token bucket,
+        prefix ctx bucket). Compile time goes to `self.compile_s`."""
+        key = self._prefill_cache_key("append", pad_to, ctx)
+        fn = _AOT_PREFILL_CACHE.get(key)
+        if fn is None:
+            t0 = time.perf_counter()
+            pspec, cspec = self._aot_specs()
+            scalar = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = self._build_append(ctx).lower(
+                pspec, cspec, jax.ShapeDtypeStruct((pad_to,), jnp.int32),
+                scalar, scalar, scalar).compile()
+            self.compile_s += time.perf_counter() - t0
+            _AOT_PREFILL_CACHE[key] = fn
+        return fn
+
+    def warmup_prefill(self, lengths=None, ctx_limits=None) -> float:
+        """Pre-compile the AOT prefill programs so a cold replica never
+        charges a compile to its first conversations' TTFT. `lengths`
+        defaults to every PREFILL_BUCKET reachable under max_ctx; turn-1
+        programs compile per length, append programs per (length, ctx)
+        pair with `ctx_limits` defaulting to every power-of-two ctx bucket
+        a prefix could occupy. Returns seconds spent compiling (also
+        accumulated in `self.compile_s`). No-op for families the jitted
+        path does not cover."""
+        if not self._prefill_jittable:
+            return 0.0
+        if lengths is None:
+            lengths = [b for b in PREFILL_BUCKETS if b <= self.kv.max_ctx]
+        if ctx_limits is None:
+            ctx_limits = []
+            b = CTX_BUCKET_MIN
+            while b < self.kv.max_ctx:
+                ctx_limits.append(b)
+                b *= 2
+            ctx_limits.append(self.kv.max_ctx)
+        before = self.compile_s
+        n_front = 0
+        if self.cfg.frontend != "none" and self.cfg.frontend_len:
+            n_front = self.cfg.frontend_len
+        for L in dict.fromkeys(bucket_len(int(x)) for x in lengths):
+            self._get_prefill(L, n_front)
+            for C in dict.fromkeys(ctx_bucket(int(c), self.kv.max_ctx)
+                                   for c in ctx_limits):
+                # skip (L, C) pairs no live slot could ever reach: the
+                # smallest prefix length in ctx bucket C plus the append
+                # must still fit the slot
+                min_prev = 0 if C <= CTX_BUCKET_MIN else C // 2 + 1
+                if min_prev + L <= self.kv.max_ctx:
+                    self._get_append(L, C)
+        return self.compile_s - before
+
     def prefill_conversation(self, slot: int, tokens: np.ndarray,
                              frontend_embeds=None) -> Tuple[np.ndarray, float]:
-        """Turn-1 prefill into `slot`. Returns (next_token, measured_s)."""
+        """Turn-1 prefill into `slot`. Returns (next_token, measured_s);
+        AOT compile time (cold bucket) is charged to `self.compile_s`,
+        never to the returned dt."""
+        true_len = len(tokens)
+        n_front = 0
+        if self.cfg.frontend != "none" and frontend_embeds is not None:
+            n_front = frontend_embeds.shape[1]
+        self._check_prefill_room(slot, n_front + true_len)
+        if not self._use_jit_prefill():
+            return self._prefill_reference(slot, tokens, frontend_embeds,
+                                           n_front)
+        pad_to = self._prefill_pad(true_len, self.kv.max_ctx - n_front)
+        fn = self._get_prefill(pad_to, n_front)  # compile OFF the clock
+        toks = np.zeros(pad_to, np.int32)
+        toks[:true_len] = tokens
+        t0 = time.perf_counter()
+        caches, tok = fn(self.params, self.kv.caches, jnp.asarray(toks),
+                         np.int32(slot), np.int32(true_len), frontend_embeds)
+        tok = jax.block_until_ready(tok)
+        self.kv.caches = caches  # donated: old buffers are dead
+        self.kv.lengths[slot] = n_front + true_len
+        dt = time.perf_counter() - t0
+        self.compute_s += dt
+        self.prefill_s += dt
+        self.n_prefill_tokens += true_len
+        return np.int32(tok), dt
+
+    def _prefill_reference(self, slot: int, tokens: np.ndarray,
+                           frontend_embeds, n_front: int
+                           ) -> Tuple[np.ndarray, float]:
+        """REFERENCE PATH (pre-AOT): eager per-op forward + host-side
+        `write_prefill` copy. The parity oracle and benchmark baseline."""
         t0 = time.perf_counter()
         true_len = len(tokens)
-        pad_to = true_len if self.exact_prefill else bucket_len(true_len)
+        pad_to = true_len if self.exact_prefill else self._prefill_pad(
+            true_len, self.kv.max_ctx - n_front)
         toks = np.zeros(pad_to, np.int32)
         toks[:true_len] = tokens
         logits, caches = self.model.prefill(
@@ -136,23 +372,50 @@ class ReplicaEngine:
             frontend_embeds=frontend_embeds,
             logits_at=true_len - 1 if pad_to != true_len else None)
         logits = jax.block_until_ready(logits)
-        n_front = 0
-        if self.cfg.frontend != "none" and frontend_embeds is not None:
-            n_front = frontend_embeds.shape[1]
         self.kv.write_prefill(slot, caches, n_front + true_len)
         dt = time.perf_counter() - t0
         self.compute_s += dt
+        self.prefill_s += dt
         self.n_prefill_tokens += true_len
         return self.sample(logits)[0], dt
 
     def append_prefill(self, slot: int, tokens: np.ndarray
                        ) -> Tuple[np.ndarray, float]:
         """Turn-2+ prefill against the slot's cached prefix (local, prefix
-        cache hit — the ConServe fast path)."""
+        cache hit — the ConServe fast path). Returns (next_token,
+        measured_s); AOT compile time is charged to `self.compile_s`."""
+        true_len = len(tokens)
+        self._check_prefill_room(slot, true_len)
+        if not self._use_jit_prefill():
+            return self._append_reference(slot, tokens)
+        prev = int(self.kv.lengths[slot])
+        pad_to = self._prefill_pad(true_len, self.kv.max_ctx - prev)
+        ctx = ctx_bucket(max(prev, 1), self.kv.max_ctx)
+        fn = self._get_append(pad_to, ctx)  # compile OFF the clock
+        toks = np.zeros(pad_to, np.int32)
+        toks[:true_len] = tokens
+        t0 = time.perf_counter()
+        caches, tok = fn(self.params, self.kv.caches, jnp.asarray(toks),
+                         np.int32(slot), np.int32(true_len), np.int32(prev))
+        tok = jax.block_until_ready(tok)
+        self.kv.caches = caches  # donated: old buffers are dead
+        self.kv.lengths[slot] = prev + true_len
+        dt = time.perf_counter() - t0
+        self.compute_s += dt
+        self.prefill_s += dt
+        self.n_prefill_tokens += true_len
+        return np.int32(tok), dt
+
+    def _append_reference(self, slot: int, tokens: np.ndarray
+                          ) -> Tuple[np.ndarray, float]:
+        """REFERENCE PATH (pre-AOT): eager forward over the full-buffer
+        prefix view (`export_slot_full` host-side copy) + host-side
+        `write_prefill`. The parity oracle and benchmark baseline."""
         t0 = time.perf_counter()
         true_len = len(tokens)
         prev = int(self.kv.lengths[slot])
-        pad_to = true_len if self.exact_prefill else bucket_len(true_len)
+        pad_to = true_len if self.exact_prefill else self._prefill_pad(
+            true_len, self.kv.max_ctx - prev)
         toks = np.zeros(pad_to, np.int32)
         toks[:true_len] = tokens
         prefix = self.kv.export_slot_full(slot)
@@ -165,6 +428,7 @@ class ReplicaEngine:
         self.kv.write_prefill(slot, caches, prev + true_len)
         dt = time.perf_counter() - t0
         self.compute_s += dt
+        self.prefill_s += dt
         self.n_prefill_tokens += true_len
         return self.sample(logits)[0], dt
 

@@ -10,6 +10,12 @@ engine — prefix reuse, slot pinning, one-shot transfer and occupancy
 accounting all have to actually work — while a full trace replays in
 seconds on CPU.
 
+Prefill stages dispatch through the replica's AOT-compiled donated bucket
+programs by default (`ReplicaEngine.prefill_mode="jit"`: one dispatch per
+(append-)prefill, in-slot KV scatter, compile time off the logical clock);
+`EngineServer(prefill_mode="reference")` replays the eager per-op oracle
+on every replica for parity runs.
+
 Serving is organized as queue-fed stages over an explicit per-conversation
 state machine (`ServeSession`): arrival no longer runs prefill inline —
 every slot-holding stage (turn-1 prefill, the one-shot KV binding, remote
@@ -78,7 +84,8 @@ class EngineServer(Runtime):
                  link_bw_bytes_s: float = 25e9, seed: int = 0,
                  max_decode_chunk: int = 32, decode_mode: str = "fused",
                  record_tokens: bool = False, strict_accounting: bool = False,
-                 rotation: bool = True, rotation_min_chunk: int = 16):
+                 rotation: bool = True, rotation_min_chunk: int = 16,
+                 prefill_mode: Optional[str] = None):
         """decode_mode: "fused" runs up to `max_decode_chunk` tokens per
         dispatch through the donated in-place RAGGED scan (`decode_steps`):
         each slot consumes only its own per-slot share, and turns that
@@ -103,9 +110,18 @@ class EngineServer(Runtime):
         record_tokens: keep every sampled token per (cid, turn) in
         `sampled_tokens` — O(total output tokens) memory, tests only.
         strict_accounting: at every conversation end, assert the NodeState
-        observables (active_kv_tokens, used_slots) still mirror the KV
-        caches' ground truth on every replica — drift detection for tests."""
+        observables (active_kv_tokens, used_slots, queued_prefill_tokens)
+        still mirror the KV caches' / admission queues' ground truth on
+        every replica — drift detection for tests.
+        prefill_mode: None (default) leaves each replica's own mode in
+        place; "jit" / "reference" overrides every replica — "reference"
+        replays the eager per-op (append-)prefill path as the parity
+        oracle (see ReplicaEngine.prefill_mode)."""
         assert decode_mode in ("fused", "reference")
+        assert prefill_mode in (None, "jit", "reference")
+        if prefill_mode is not None:
+            for r in replicas:
+                r.prefill_mode = prefill_mode
         self.sched = scheduler
         self.replicas = {r.replica_id: r for r in replicas}
         self.link_bw = link_bw_bytes_s
@@ -228,7 +244,13 @@ class EngineServer(Runtime):
     def check_accounting(self):
         """Assert every NodeState observable mirrors its replica's KV ground
         truth (satellite of the runtime redesign: observation means the
-        counters must BE the state, not an estimate of it)."""
+        counters must BE the state, not an estimate of it). The prefill
+        backlog counter is included: at every event boundary a node's
+        `queued_prefill_tokens` must equal exactly the first-turn tokens of
+        the arrivals PARKED in its admission queue (admitted turn-1
+        prefills run synchronously, so nothing is admitted-unstarted when
+        this runs) — the counter must follow a re-placed arrival to the
+        queue that actually holds it, not to where it eventually runs."""
         for nid, node in self.replicas.items():
             st = self.states[nid]
             assert st.active_kv_tokens == node.kv.active_kv_tokens, (
@@ -238,6 +260,12 @@ class EngineServer(Runtime):
             assert st.used_slots == int(node.kv.active.sum()), (
                 f"replica {nid}: NodeState.used_slots={st.used_slots} != "
                 f"{int(node.kv.active.sum())} active KV slots")
+            parked = sum(a.need_tokens for a in
+                         self._admission[nid].admissions("arrival"))
+            assert st.queued_prefill_tokens == parked, (
+                f"replica {nid}: NodeState.queued_prefill_tokens="
+                f"{st.queued_prefill_tokens} != {parked} first-turn tokens "
+                f"parked in its admission queue (backlog counter drift)")
 
     # ----- arrival & turn-1 prefill -------------------------------------------------
     def _arrive(self, conv: Conversation):
@@ -247,21 +275,25 @@ class EngineServer(Runtime):
         st.queued_prefill_tokens += conv.first_input_len
         self._offer(pl.node_id,
                     Admission(conv.cid, conv.first_input_len,
-                              lambda nid, conv=conv, placed=pl.node_id:
-                              self._prefill_turn1(conv, nid, placed),
+                              lambda nid, conv=conv:
+                              self._prefill_turn1(conv, nid),
                               kind="arrival"),
                     self._now)
 
-    def _prefill_turn1(self, conv: Conversation, node_id: int,
-                       placed_id: Optional[int] = None):
+    def _on_reoffer_move(self, adm: Admission, from_node: int, to_node: int):
+        """A reoffer policy moved a parked admission: the prefill backlog
+        observable follows the ARRIVAL to the queue that now holds it, at
+        the instant it moves. (It used to follow only when the prefill
+        finally RAN, so a twice-parked arrival left the counter sitting on
+        the first node for the whole parked interval — the backlog drift
+        strict accounting now rejects.)"""
+        if adm.kind == "arrival":
+            self.states[from_node].queued_prefill_tokens -= adm.need_tokens
+            self.states[to_node].queued_prefill_tokens += adm.need_tokens
+
+    def _prefill_turn1(self, conv: Conversation, node_id: int):
         node = self.replicas[node_id]
         st = self.states[node_id]
-        if placed_id is not None and placed_id != node_id:
-            # a reoffer_admission policy moved this arrival: the backlog
-            # observable follows the work to the admitting node
-            self.states[placed_id].queued_prefill_tokens -= \
-                conv.first_input_len
-            st.queued_prefill_tokens += conv.first_input_len
         start = max(self._now, self.clock[node_id])
         self.sessions[conv.cid].transition(PREFILLING, start)
 

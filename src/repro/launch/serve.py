@@ -50,6 +50,12 @@ def main():
                          "(adaptive chunk cuts + mid-tail slot refill) and "
                          "fall back to chunk-boundary-only admission — the "
                          "before/after comparison knob")
+    ap.add_argument("--prefill-mode", default=None,
+                    choices=["jit", "reference"],
+                    help="engine: override the (append-)prefill path — "
+                         "'jit' = AOT-compiled donated bucket programs "
+                         "(replica default), 'reference' = the eager "
+                         "per-op oracle — the before/after comparison knob")
     args = ap.parse_args()
 
     if args.engine:
@@ -68,7 +74,8 @@ def main():
             ReplicaEngine(cfg, params, n_slots=args.slots, max_ctx=1024,
                           replica_id=i, role="decode") for i in (1, 2)]
         srv = EngineServer(make_scheduler(args.scheduler), reps,
-                           rotation=not args.no_rotation)
+                           rotation=not args.no_rotation,
+                           prefill_mode=args.prefill_mode)
         tc = TraceConfig(first_input_median=150, first_input_max=500,
                          append_median=24, append_max=64, output_median=10,
                          output_max=32, mean_turns=3.0, max_turns=6,

@@ -418,7 +418,8 @@ def _proj_qkv(params, cfg: ModelConfig, x):
 
 def gqa_prefill(params, cfg: ModelConfig, kind: str, x, start_pos: int,
                 prefix_kv: Optional[Dict] = None, kv_lens=None,
-                prefix_start: Optional[int] = None):
+                prefix_start: Optional[int] = None,
+                attention_impl: str = "xla"):
     """Prefill / append-prefill. Returns (out, {"k","v"} new-token cache).
 
     prefix_kv layouts:
@@ -427,6 +428,15 @@ def gqa_prefill(params, cfg: ModelConfig, kind: str, x, start_pos: int,
       * engine slots (prefix_start=0): the prefix buffer starts at position
         0 and may be right-padded beyond the live length; pass kv_lens to
         mask the padding.
+
+    `attention_impl="pallas"` (static) routes FRESH global-attention
+    prefill (no prefix, no kv_lens masking, no window) through the
+    flash-prefill kernel — native on TPU, interpret-mode elsewhere. The
+    kernel computes plain causal attention over the padded bucket, which
+    is exactly what the engine's turn-1 prefill needs (padded positions
+    attend only rightward of the live tokens; their outputs and KV are
+    discarded/masked by the caller). Append-prefill prefix reads, ragged
+    kv_lens masks and sliding windows fall back to the jnp paths below.
     """
     B, S, _ = x.shape
     q, k, v = _proj_qkv(params, cfg, x)
@@ -459,7 +469,13 @@ def gqa_prefill(params, cfg: ModelConfig, kind: str, x, start_pos: int,
     else:
         kf = _repeat_kv(k, cfg.n_heads)
         vf = _repeat_kv(v, cfg.n_heads)
-        if cfg.flash_vjp and kv_lens is None and not cfg.attn_block_full:
+        use_pallas = (attention_impl == "pallas" and kv_lens is None
+                      and window == 0
+                      and (S <= 128 or S % 128 == 0))
+        if use_pallas:
+            from repro.kernels import ops
+            out = ops.prefill_attention(q, kf, vf, window=0, impl="pallas")
+        elif cfg.flash_vjp and kv_lens is None and not cfg.attn_block_full:
             out = flash_attention(q, kf, vf, start_pos, start_pos, True,
                                   window, 512)
         elif kind == ATTN_LOCAL and cfg.window and not cfg.attn_block_full:

@@ -90,10 +90,14 @@ def _ffn(params, cfg: ModelConfig, kind: str, x, cache, updates):
 
 def block_prefill(params, cfg: ModelConfig, kind: str, x, start_pos,
                   cache: Optional[Dict] = None, kv_lens=None,
-                  prefix_start=None) -> Tuple[jnp.ndarray, Dict]:
+                  prefix_start=None, attention_impl: str = "xla"
+                  ) -> Tuple[jnp.ndarray, Dict]:
     """cache: prefix KV (append-prefill) or recurrent state; None = fresh.
     Returns (x_out, cache_out): new-token KV entries for attention kinds,
-    updated state for recurrent kinds (plus cmix shift under 'cshift')."""
+    updated state for recurrent kinds (plus cmix shift under 'cshift').
+    `attention_impl` (static) selects the prefill attention kernel for
+    global-attention blocks; MLA, sliding-window and recurrent kinds have
+    no Pallas prefill kernel and ignore it."""
     h = apply_norm(params["ln1"], cfg, x)
     updates: Dict[str, Any] = {}
     if kind == ATTN_MLA:
@@ -103,7 +107,8 @@ def block_prefill(params, cfg: ModelConfig, kind: str, x, start_pos,
     elif kind in (ATTN_GLOBAL, ATTN_LOCAL):
         out, cache_out = gqa_prefill(params["attn"], cfg, kind, h, start_pos,
                                      prefix_kv=cache, kv_lens=kv_lens,
-                                     prefix_start=prefix_start)
+                                     prefix_start=prefix_start,
+                                     attention_impl=attention_impl)
     elif kind == RWKV6:
         state = cache or rwkv6_init_state(cfg, x.shape[0])
         out, cache_out = rwkv6_prefill(params["tmix"], cfg, h,

@@ -60,10 +60,14 @@ class Model:
 
     def prefill(self, params, tokens, *, caches=None, start_pos: int = 0,
                 frontend_embeds=None, kv_lens=None, prefix_start=None,
-                logits_at=None):
+                logits_at=None, attention_impl: str = "xla"):
         """(logits (B,V), caches_out). caches=None: fresh turn-1 prefill;
         otherwise append-prefill against the cached prefix. See lm_prefill
-        for the engine-mode prefix_start / logits_at semantics."""
+        for the engine-mode prefix_start / logits_at semantics.
+        `attention_impl` (static): "pallas" routes fresh global-attention
+        prefill through the flash-prefill kernel; families/cases the kernel
+        does not cover (MLA, sliding window, append-prefill prefix reads,
+        recurrent, encdec) fall back to jnp regardless."""
         if self.cfg.is_encoder_decoder:
             return encdec.encdec_prefill(params, self.cfg, tokens,
                                          frontend_embeds=frontend_embeds,
@@ -74,7 +78,8 @@ class Model:
                                       frontend_embeds=frontend_embeds,
                                       kv_lens=kv_lens,
                                       prefix_start=prefix_start,
-                                      logits_at=logits_at)
+                                      logits_at=logits_at,
+                                      attention_impl=attention_impl)
 
     def decode_step(self, params, token, caches, position, kv_lens=None,
                     ctx_limit=None, attention_impl: str = "xla"):

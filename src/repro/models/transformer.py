@@ -62,17 +62,22 @@ def _embed_inputs(params, cfg: ModelConfig, tokens, frontend_embeds):
 def lm_hidden(params, cfg: ModelConfig, tokens, *, mode: str = "train",
               caches: Optional[Dict] = None, start_pos: int = 0,
               frontend_embeds=None, kv_lens=None, remat: bool = False,
-              prefix_start=None) -> Tuple[jnp.ndarray, Dict]:
+              prefix_start=None, attention_impl: str = "xla"
+              ) -> Tuple[jnp.ndarray, Dict]:
     """Run the stack in 'train'/'prefill' mode. Returns (hidden, caches_out).
     hidden is post-final-norm (B, S[, +frontend], D); caller unembeds
-    (train uses chunked-vocab loss instead of materializing logits)."""
+    (train uses chunked-vocab loss instead of materializing logits).
+    `attention_impl` (static) selects the prefill attention kernel for
+    global-attention blocks (see gqa_prefill); the train path keeps the
+    default jnp attention."""
     pat, n_groups, rem = cfg.pattern_groups()
     h, n_front = _embed_inputs(params, cfg, tokens, frontend_embeds)
     sp = start_pos  # frontend tokens occupy the first positions
 
     def one_block(kind, bparams, hh, bcache):
         return block_prefill(bparams, cfg, kind, hh, sp, cache=bcache,
-                             kv_lens=kv_lens, prefix_start=prefix_start)
+                             kv_lens=kv_lens, prefix_start=prefix_start,
+                             attention_impl=attention_impl)
 
     per_layer = remat and cfg.remat_granularity in ("layer", "both")
     block_fns = {kind: (jax.checkpoint(partial(one_block, kind))
@@ -124,7 +129,8 @@ def lm_hidden(params, cfg: ModelConfig, tokens, *, mode: str = "train",
             rc = None if caches is None else caches["rem"][key]
             h, co = block_prefill(params["rem"][key], cfg, kind, h, sp,
                                   cache=rc, kv_lens=kv_lens,
-                                  prefix_start=prefix_start)
+                                  prefix_start=prefix_start,
+                                  attention_impl=attention_impl)
             if not train_mode:
                 routs[key] = co
         caches_out["rem"] = routs
@@ -140,14 +146,16 @@ def lm_logits(params, cfg: ModelConfig, hidden):
 
 def lm_prefill(params, cfg: ModelConfig, tokens, *, caches=None,
                start_pos: int = 0, frontend_embeds=None, kv_lens=None,
-               prefix_start=None, logits_at=None):
+               prefix_start=None, logits_at=None, attention_impl: str = "xla"):
     """Prefill: returns (logits (B,V), caches_out). logits_at selects the
     position whose logits are returned (engine passes true_len-1 when the
-    token batch is right-padded to a bucket; default: last position)."""
+    token batch is right-padded to a bucket; default: last position).
+    `attention_impl` (static) selects the prefill attention kernel."""
     h, caches_out = lm_hidden(params, cfg, tokens, mode="prefill",
                               caches=caches, start_pos=start_pos,
                               frontend_embeds=frontend_embeds, kv_lens=kv_lens,
-                              prefix_start=prefix_start)
+                              prefix_start=prefix_start,
+                              attention_impl=attention_impl)
     if logits_at is None:
         hh = h[:, -1]
     else:

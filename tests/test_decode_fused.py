@@ -327,21 +327,25 @@ def _staggered_trace():
 def test_server_staggered_finish_fused_matches_reference(qwen):
     """Short-output agentic trace with staggered finishes: ragged fused
     serving must produce byte-identical per-(cid, turn) token streams and
-    turn records vs decode_mode="reference"."""
+    turn records vs decode_mode="reference" — with the jitted prefill ON
+    (the default) in both runs, and a third fully-eager run
+    (prefill_mode="reference") matching the fused streams too."""
     cfg, model, params = qwen
 
-    def run(mode):
+    def run(mode, prefill_mode=None):
         rep = ReplicaEngine(cfg, params, n_slots=8, max_ctx=256,
                             replica_id=0, role="mixed")
         srv = EngineServer(make_scheduler("conserve"), [rep],
                            decode_mode=mode, record_tokens=True,
-                           strict_accounting=True)
+                           strict_accounting=True, prefill_mode=prefill_mode)
         recs = srv.serve(_staggered_trace())
         srv.check_accounting()
         return srv, {c.cid: c for c in recs}
 
     s_ref, r_ref = run("reference")
     s_fus, r_fus = run("fused")
+    s_eag, _ = run("reference", prefill_mode="reference")
+    assert s_eag.sampled_tokens == s_fus.sampled_tokens
     assert s_ref.sampled_tokens == s_fus.sampled_tokens
     assert sorted(r_ref) == sorted(r_fus)
     for cid in r_ref:

@@ -1,0 +1,376 @@
+"""Zero-dispatch prefill tests: the AOT-compiled donated (append-)prefill
+programs vs the retained eager reference path — token and cache parity,
+in-slot donated writes, compile-time accounting, warmup, the loud overflow
+guard, the Pallas prefill-attention routing, and server-level equivalence
+between prefill modes (including the backlog-counter strict-accounting
+fix for re-placed turn-1 prefills)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import ConServeScheduler, make_scheduler
+from repro.core.conversation import Conversation, Turn
+from repro.core.scheduler import Placement
+from repro.engine import EngineServer, ReplicaEngine
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _cache_equal(a_eng, b_eng, atol=0.0):
+    np.testing.assert_array_equal(a_eng.kv.lengths, b_eng.kv.lengths)
+    for a, b in zip(jax.tree_util.tree_leaves(a_eng.kv.caches),
+                    jax.tree_util.tree_leaves(b_eng.kv.caches)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=atol)
+
+
+# --------------------------------------------------------------------------- #
+# jitted (append-)prefill vs the eager reference oracle
+# --------------------------------------------------------------------------- #
+def test_jit_prefill_matches_reference_token_and_cache(qwen):
+    """One turn-1 prefill per mode: identical next token, byte-identical
+    slot cache (the donated in-program scatter must land exactly where the
+    host-side write_prefill copy used to)."""
+    cfg, model, params = qwen
+    toks = np.arange(11, 58, dtype=np.int32)  # 47 -> bucket 64 (padded)
+    engs = {m: ReplicaEngine(cfg, params, n_slots=4, max_ctx=256,
+                             prefill_mode=m)
+            for m in ("jit", "reference")}
+    out = {}
+    for m, eng in engs.items():
+        slot = eng.kv.acquire()
+        assert slot == 0
+        tok, dt = eng.prefill_conversation(slot, toks)
+        out[m] = int(tok)
+        assert dt > 0
+    assert out["jit"] == out["reference"]
+    _cache_equal(engs["jit"], engs["reference"])
+
+
+def test_jit_append_prefill_matches_reference(qwen):
+    """Multi-turn: turn-1 + two appends (prefix crossing a ctx bucket) per
+    mode — tokens and final cache identical, and the jitted path must
+    never touch export_slot_full (the host-side prefix copy it deletes)."""
+    cfg, model, params = qwen
+    engs = {m: ReplicaEngine(cfg, params, n_slots=2, max_ctx=256,
+                             prefill_mode=m)
+            for m in ("jit", "reference")}
+    toks1 = np.arange(5, 50, dtype=np.int32)       # 45
+    toks2 = np.arange(100, 131, dtype=np.int32)    # 31 -> prefix 45
+    toks3 = np.arange(200, 215, dtype=np.int32)    # 15 -> prefix 76 (>64)
+    out = {}
+    calls = {m: 0 for m in engs}
+    for m, eng in engs.items():
+        orig = eng.kv.export_slot_full
+
+        def spy(slot, m=m, orig=orig):
+            calls[m] += 1
+            return orig(slot)
+
+        eng.kv.export_slot_full = spy
+        slot = eng.kv.acquire()
+        t1, _ = eng.prefill_conversation(slot, toks1)
+        t2, _ = eng.append_prefill(slot, toks2)
+        t3, _ = eng.append_prefill(slot, toks3)
+        out[m] = (int(t1), int(t2), int(t3))
+    assert out["jit"] == out["reference"]
+    _cache_equal(engs["jit"], engs["reference"])
+    assert calls["reference"] == 2  # the oracle still reads the full view
+    assert calls["jit"] == 0        # the hot path never materializes it
+
+
+def test_jit_prefill_then_decode_matches_reference_rollout(qwen):
+    """The jitted prefill's cache must feed the fused decode scan exactly
+    as the eager one does (prefill -> decode -> append -> decode)."""
+    cfg, model, params = qwen
+
+    def roll(mode):
+        eng = ReplicaEngine(cfg, params, n_slots=2, max_ctx=256,
+                            prefill_mode=mode)
+        s = eng.kv.acquire()
+        t, _ = eng.prefill_conversation(s, np.arange(7, 44, dtype=np.int32))
+        toks = [int(t)]
+        nt = np.zeros(2, np.int32)
+        em = np.zeros(2, bool)
+        em[s] = True
+        nt[s] = toks[-1]
+        seq, _ = eng.decode_steps(nt, em, 4)
+        toks += [int(x) for x in seq[:, s]]
+        t2, _ = eng.append_prefill(s, np.arange(60, 75, dtype=np.int32))
+        toks.append(int(t2))
+        nt[s] = toks[-1]
+        seq, _ = eng.decode_steps(nt, em, 3)
+        toks += [int(x) for x in seq[:, s]]
+        return toks
+
+    assert roll("jit") == roll("reference")
+
+
+def test_prefill_compile_time_off_the_clock(qwen):
+    """A cold bucket's AOT compile lands in compile_s and never in the
+    measured dt; a warm bucket charges no compile at all."""
+    cfg, model, params = qwen
+    from repro.engine import replica as replica_mod
+    # isolate from programs other tests may have compiled in-process
+    replica_mod._AOT_PREFILL_CACHE.clear()
+    eng = ReplicaEngine(cfg, params, n_slots=2, max_ctx=256)
+    s = eng.kv.acquire()
+    assert eng.compile_s == 0.0
+    _, dt_cold = eng.prefill_conversation(s, np.arange(3, 40, dtype=np.int32))
+    spent = eng.compile_s
+    assert spent > 0                      # bucket 64 compiled...
+    assert dt_cold < spent                # ...but never inside measured dt
+    eng.kv.release(s)
+    s = eng.kv.acquire()
+    before = eng.compile_s
+    _, dt_warm = eng.prefill_conversation(s, np.arange(9, 50, dtype=np.int32))
+    assert eng.compile_s == before        # same bucket: no compile charged
+    assert dt_warm < 100 * max(dt_cold, 1e-4)
+
+
+def test_warmup_prefill_precompiles(qwen):
+    """warmup_prefill pre-builds the named (length[, ctx]) buckets so a
+    cold replica's first conversations hit warm programs."""
+    cfg, model, params = qwen
+    from repro.engine import replica as replica_mod
+    replica_mod._AOT_PREFILL_CACHE.clear()
+    eng = ReplicaEngine(cfg, params, n_slots=2, max_ctx=128)
+    spent = eng.warmup_prefill(lengths=(32, 64), ctx_limits=(64,))
+    assert spent > 0
+    assert eng.compile_s == pytest.approx(spent)
+    s = eng.kv.acquire()
+    before = eng.compile_s
+    eng.prefill_conversation(s, np.arange(4, 30, dtype=np.int32))  # 32-bucket
+    eng.append_prefill(s, np.arange(50, 80, dtype=np.int32))  # (32, 64)
+    assert eng.compile_s == before  # both hits pre-warmed programs
+    # a second replica with the same signature shares the process-wide
+    # programs: warming it again compiles nothing
+    eng2 = ReplicaEngine(cfg, params, n_slots=2, max_ctx=128)
+    assert eng2.warmup_prefill(lengths=(32, 64), ctx_limits=(64,)) == 0.0
+
+
+def test_prefill_overflow_names_slot(qwen):
+    """(Append-)prefill past max_ctx must refuse loudly naming the slot —
+    in BOTH modes (the scatter would silently clamp otherwise)."""
+    cfg, model, params = qwen
+    for mode in ("jit", "reference"):
+        eng = ReplicaEngine(cfg, params, n_slots=2, max_ctx=64,
+                            prefill_mode=mode)
+        s = eng.kv.acquire()
+        eng.prefill_conversation(s, np.arange(11, 51, dtype=np.int32))  # 40
+        with pytest.raises(RuntimeError, match=rf"slot {s} at length 40"):
+            eng.append_prefill(s, np.arange(30, dtype=np.int32))
+        with pytest.raises(RuntimeError, match="prefill overflow"):
+            eng.prefill_conversation(eng.kv.acquire(),
+                                     np.arange(70, dtype=np.int32))
+
+
+def test_append_near_full_slot_pads_exact_not_clamped(qwen):
+    """An append that FITS unpadded but whose length bucket would not
+    (prev 40, append 20, max_ctx 64, bucket 32) must fall back to an
+    exact-length pad instead of letting the padded scatter clamp into —
+    and corrupt — the live prefix rows. Caught by decoding THROUGH the
+    appended cache and comparing against the unpadded full-prefill oracle,
+    in both prefill modes."""
+    cfg, model, params = qwen
+    from repro.models.model import merge_decode_cache as merge
+    t1 = np.arange(5, 45, dtype=np.int32)       # 40
+    app = np.arange(100, 120, dtype=np.int32)   # 20 -> 60 fits, 40+32 > 64
+
+    def oracle():
+        full = np.concatenate([t1, app])
+        lg, caches = model.prefill(params, jnp.asarray(full)[None])
+        toks = [int(jnp.argmax(lg[0, :cfg.vocab_size]))]
+        pos = len(full)
+        for _ in range(3):
+            lg, ups = model.decode_step(params, jnp.asarray([toks[-1]]),
+                                        caches, jnp.asarray([pos]))
+            caches = merge(caches, ups)
+            pos += 1
+            toks.append(int(jnp.argmax(lg[0, :cfg.vocab_size])))
+        return toks
+
+    want = oracle()
+    for mode in ("jit", "reference"):
+        eng = ReplicaEngine(cfg, params, n_slots=2, max_ctx=64,
+                            prefill_mode=mode)
+        s = eng.kv.acquire()
+        eng.prefill_conversation(s, t1)
+        tok, _ = eng.append_prefill(s, app)
+        got = [int(tok)]
+        nt = np.zeros(2, np.int32)
+        em = np.zeros(2, bool)
+        em[s] = True
+        for _ in range(3):
+            nt[s] = got[-1]
+            seq, _ = eng.decode_steps(nt, em, 1)
+            got.append(int(seq[0, s]))
+        assert got == want, mode
+
+
+def test_exact_prefill_families_fall_back_to_reference(qwen):
+    """Recurrent-block families keep the exact-length eager path no matter
+    the requested mode (padding would corrupt recurrent state)."""
+    cfg = get_reduced("rwkv6-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ReplicaEngine(cfg, params, n_slots=2, max_ctx=128,
+                        prefill_mode="jit")
+    assert not eng._use_jit_prefill()
+    s = eng.kv.acquire()
+    tok, _ = eng.prefill_conversation(s, np.arange(5, 26, dtype=np.int32))
+    assert int(eng.kv.lengths[s]) == 21  # exact, unbucketed
+    assert eng.compile_s == 0.0          # nothing AOT-compiled
+
+
+# --------------------------------------------------------------------------- #
+# pallas prefill-attention routing
+# --------------------------------------------------------------------------- #
+def test_attention_impl_pallas_matches_xla_prefill(qwen):
+    """attention_impl="pallas" must route fresh global-attention prefill
+    through the flash-prefill kernel token-exactly vs the jnp path, with
+    the decode tail still matching afterwards."""
+    cfg, model, params = qwen
+
+    def roll(impl):
+        eng = ReplicaEngine(cfg, params, n_slots=2, max_ctx=256,
+                            attention_impl=impl)
+        s = eng.kv.acquire()
+        t, _ = eng.prefill_conversation(s, np.arange(3, 45, dtype=np.int32))
+        toks = [int(t)]
+        t2, _ = eng.append_prefill(s, np.arange(80, 95, dtype=np.int32))
+        toks.append(int(t2))
+        nt = np.zeros(2, np.int32)
+        em = np.zeros(2, bool)
+        nt[s], em[s] = toks[-1], True
+        seq, _ = eng.decode_steps(nt, em, 3)
+        return toks + [int(x) for x in seq[:, s]]
+
+    assert roll("xla") == roll("pallas")
+
+
+# --------------------------------------------------------------------------- #
+# server-level equivalence + backlog accounting
+# --------------------------------------------------------------------------- #
+def _overload_trace():
+    convs = []
+    for i in range(6):
+        turns = [Turn(append_tokens=20 + 11 * i, output_tokens=3 + i,
+                      tool_time_s=0.0)]
+        if i % 2 == 0:
+            turns.append(Turn(append_tokens=12, output_tokens=4,
+                              tool_time_s=0.0))
+        convs.append(Conversation(cid=i, arrival_s=0.0, turns=turns))
+    return convs
+
+
+def test_server_prefill_modes_token_identical(qwen):
+    """EngineServer(prefill_mode=...) must serve byte-identical per-(cid,
+    turn) token streams and turn records across jit / reference prefill —
+    the jitted programs change dispatch count, never content."""
+    cfg, model, params = qwen
+
+    def run(mode):
+        rep = ReplicaEngine(cfg, params, n_slots=4, max_ctx=256,
+                            replica_id=0, role="mixed")
+        srv = EngineServer(make_scheduler("conserve"), [rep],
+                           record_tokens=True, strict_accounting=True,
+                           prefill_mode=mode)
+        recs = srv.serve(_overload_trace())
+        srv.check_accounting()
+        return srv, {c.cid: c for c in recs}
+
+    s_jit, r_jit = run("jit")
+    s_ref, r_ref = run("reference")
+    assert s_jit.sampled_tokens == s_ref.sampled_tokens
+    assert sorted(r_jit) == sorted(r_ref)
+    for cid in r_ref:
+        a = [(t.turn_idx, t.n_output_tokens) for t in r_ref[cid].turns]
+        b = [(t.turn_idx, t.n_output_tokens) for t in r_jit[cid].turns]
+        assert a == b
+
+
+class _MoveArrivalsScheduler(ConServeScheduler):
+    """Test policy: every parked arrival on node 0 is re-offered to node 1
+    (exercises the re-placed turn-1 prefill backlog accounting)."""
+    name = "_test_move_arrivals"
+
+    def reoffer_admission(self, cid, node_id, view):
+        if node_id == 0:
+            return Placement(1)
+        return None
+
+
+def test_replaced_turn1_prefill_keeps_backlog_counter_exact(qwen):
+    """A turn-1 prefill parked on one node and re-placed onto another by a
+    reoffer policy must carry its queued_prefill_tokens with it the moment
+    it moves — strict accounting (which now covers the backlog counter)
+    passes at every conversation end."""
+    cfg, model, params = qwen
+    reps = [ReplicaEngine(cfg, params, n_slots=1, max_ctx=256, replica_id=0,
+                          role="mixed"),
+            ReplicaEngine(cfg, params, n_slots=4, max_ctx=256, replica_id=1,
+                          role="mixed")]
+    srv = EngineServer(_MoveArrivalsScheduler(), reps,
+                       record_tokens=True, strict_accounting=True)
+    recs = srv.serve(_overload_trace())
+    assert len(recs) == 6
+    srv.check_accounting()
+    assert srv.n_deferred_admissions > 0  # parking + re-placement happened
+    for st in srv.states.values():
+        assert st.queued_prefill_tokens == 0
+        assert st.active_kv_tokens == 0 and st.used_slots == 0
+
+
+def test_sjf_refill_reorders_and_streams_invariant(qwen):
+    """conserve_sjf_refill: parked admissions drain shortest-context-first
+    (the unit test below asserts the reorder directly), and the served
+    token streams are byte-identical to FIFO ConServe — refill order
+    changes WHEN work runs, never WHAT it computes."""
+    cfg, model, params = qwen
+
+    def run(name):
+        rep = ReplicaEngine(cfg, params, n_slots=2, max_ctx=256,
+                            replica_id=0, role="mixed")
+        srv = EngineServer(make_scheduler(name), [rep],
+                           record_tokens=True, strict_accounting=True)
+        recs = srv.serve(_overload_trace())
+        assert len(recs) == 6
+        return srv
+
+    s_fifo = run("conserve")
+    s_sjf = run("conserve_sjf_refill")
+    assert s_fifo.sampled_tokens == s_sjf.sampled_tokens
+    assert s_sjf.n_deferred_admissions > 0  # the queue was exercised
+
+
+def test_sjf_refill_orders_queue_shortest_context_first():
+    """Pure unit test of the select_refill hook: a FIFO queue of cids the
+    policy has observed reorders by ascending context; unseen cids keep
+    FIFO rank at the tail."""
+    from repro.core import ConServeSJFRefillScheduler
+    from repro.core.conversation import ConversationView, TurnView
+    from repro.core.signals import (ClusterView, NodeState,
+                                    PrefillLatencyCurve)
+    view = ClusterView({0: NodeState(node_id=0, role="mixed")},
+                       PrefillLatencyCurve(0.0, 1e-5, 0.01))
+    s = ConServeSJFRefillScheduler()
+    s.place_first_prefill(ConversationView(10, 0.0, 300), view)
+    s.place_first_prefill(ConversationView(11, 0.0, 40), view)
+    s.place_first_prefill(ConversationView(12, 0.0, 120), view)
+    # cid 12 accumulates a turn: context 120 + append 50 = 170 observed
+    s.place_turn(TurnView(12, 1, 50, 120), 0, view)
+    fifo = [10, 11, 12, 99]  # 99 never observed
+    assert s.select_refill(0, list(fifo), view) == [11, 12, 10, 99]
+    # conversation end forgets the cid (no stale growth)
+    s.on_conversation_end(11, view)
+    assert s.select_refill(0, list(fifo), view) == [12, 10, 11, 99]
