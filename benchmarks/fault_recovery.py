@@ -1,0 +1,184 @@
+"""Fault-recovery smoke benchmark: seeded replica failures mid-serve must
+COMPLETE on both backends, and every recovered per-(cid, turn) token stream
+on the real engine must be BYTE-IDENTICAL to the failure-free run — the
+observation-only failure contract (journaled deterministic replay, no
+predicted state ever reconstructed).
+
+Scenarios:
+  * engine: disaggregated 1 prefiller + 2 decoders (real JAX). A
+    failure-free pass establishes the reference streams and the serving
+    span; seeded failure schedules then kill a decoder at fractions of that
+    span (plus one armed KV-transfer fault) and every stream is compared
+    byte for byte. Recovery latency (trigger -> interrupted decode
+    runnable) and replayed prefill tokens are recorded.
+  * simulator: the paper's 4-GPU ConServe deployment with a decoder death
+    mid-run, and a tool-deadline watchdog variant (evictions + replay on
+    tool return) — same Runtime failure contract at cluster scale.
+
+Writes BENCH_fault_recovery.json (BENCH_fault_recovery_quick.json under
+--quick) at the repo root; CI runs the quick variant and fails unless every
+submitted conversation completes under failures on BOTH backends AND the
+engine's recovered streams are byte-identical.
+
+Usage: PYTHONPATH=src python -m benchmarks.fault_recovery [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .common import emit
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_fault_recovery.json"
+BENCH_QUICK_PATH = BENCH_PATH.with_name("BENCH_fault_recovery_quick.json")
+
+
+def _trace(n):
+    from repro.core.conversation import Conversation, Turn
+    return [Conversation(cid=i, arrival_s=i * 1e-6, turns=[
+        Turn(append_tokens=24 + 4 * (i % 5), output_tokens=10,
+             tool_time_s=0.05),
+        Turn(append_tokens=10 + 2 * (i % 4), output_tokens=8,
+             tool_time_s=0.0)]) for i in range(n)]
+
+
+def _engine_recovery(n_convs: int, n_schedules: int, seed: int = 0):
+    import jax
+    from repro.configs import get_reduced
+    from repro.core import make_scheduler
+    from repro.core.metrics import summarize
+    from repro.engine import EngineServer, ReplicaEngine
+    from repro.models import build_model
+
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def serve(fail=None, transfer_faults=0):
+        reps = [ReplicaEngine(cfg, params, n_slots=2 * n_convs, max_ctx=256,
+                              replica_id=0, role="prefill"),
+                ReplicaEngine(cfg, params, n_slots=max(2, n_convs // 2),
+                              max_ctx=256, replica_id=1, role="decode"),
+                ReplicaEngine(cfg, params, n_slots=max(2, n_convs // 2),
+                              max_ctx=256, replica_id=2, role="decode")]
+        srv = EngineServer(make_scheduler("conserve"), reps,
+                           record_tokens=True, strict_accounting=True)
+        if fail is not None:
+            srv.fail_replica(*fail)
+        if transfer_faults:
+            srv.inject_transfer_faults(transfer_faults)
+        recs = srv.serve(_trace(n_convs))
+        return srv, recs
+
+    base_srv, base_recs = serve()
+    span = max(t.last_token_s for r in base_recs for t in r.turns)
+    rng = np.random.RandomState(seed)
+    schedules = [(int(rng.randint(1, 3)), float(rng.uniform(0.05, 0.95)))
+                 for _ in range(n_schedules)]
+    runs, identical, total_recovered = [], True, 0
+    rec_lat = []
+    for i, (victim, frac) in enumerate(schedules):
+        srv, recs = serve(fail=(victim, frac * span),
+                          transfer_faults=1 if i == 0 else 0)
+        same = srv.sampled_tokens == base_srv.sampled_tokens
+        identical = identical and same
+        s = summarize(recs)
+        total_recovered += s["n_recovered"]
+        rec_lat += [l for r in recs for l in r.recovery_latency_s]
+        runs.append({
+            "victim": victim, "fail_at_s": round(frac * span, 4),
+            "completed": len(recs), "streams_identical": same,
+            "n_recovered": s["n_recovered"],
+            "n_transfer_retries": srv.n_transfer_retries,
+            "recovery_latency_mean_s": s["recovery_latency_mean_s"],
+            "replayed_prefill_tokens": sum(
+                st.replayed_prefill_tokens for st in srv.states.values()),
+        })
+    return {
+        "n_conversations": n_convs,
+        "n_schedules": n_schedules,
+        "baseline_span_s": round(span, 4),
+        "all_complete": all(r["completed"] == n_convs for r in runs),
+        "streams_identical": identical,
+        "total_recovered": total_recovered,
+        "recovery_latency_mean_s": float(np.mean(rec_lat)) if rec_lat else 0.0,
+        "recovery_latency_p95_s": float(np.percentile(rec_lat, 95))
+        if rec_lat else 0.0,
+        "runs": runs,
+    }
+
+
+def _sim_recovery(n_convs: int):
+    from repro.cluster import paper_deployment
+    from repro.core.metrics import summarize
+    from repro.traces import TraceConfig, generate_trace
+
+    trace = generate_trace(n_convs, 1.2,
+                           TraceConfig(seed=21, mean_turns=5.0,
+                                       tool_mean_s=4.0))
+    sim = paper_deployment("conserve")
+    sim.submit(trace)
+    sim.inject_failure(node_id=1, at_s=15.0)
+    sim.run()
+    recs = sim.results()
+    s = summarize(recs)
+    fail = {
+        "completed": len(recs),
+        "n_recovered": s["n_recovered"],
+        "recovery_latency_mean_s": s["recovery_latency_mean_s"],
+        "recovery_latency_p95_s": s["recovery_latency_p95_s"],
+        "replayed_prefill_tokens":
+            sim.nodes[0].state.replayed_prefill_tokens,
+    }
+    wd = paper_deployment("conserve", tool_deadline_s=2.0,
+                          tool_timeout_action="evict")
+    wd_trace = generate_trace(n_convs, 1.5,
+                              TraceConfig(seed=31, mean_turns=4.0,
+                                          tool_mean_s=10.0))
+    wd.submit(wd_trace).run()
+    ws = summarize(wd.results())
+    watchdog = {
+        "completed": len(wd.results()),
+        "n_tool_evictions": ws["n_tool_evictions"],
+        "n_recovered": ws["n_recovered"],
+        "recovery_latency_mean_s": ws["recovery_latency_mean_s"],
+    }
+    return {"n_conversations": n_convs, "decoder_death": fail,
+            "tool_watchdog": watchdog}
+
+
+def main(quick: bool = False):
+    import jax
+
+    eng = _engine_recovery(n_convs=4 if quick else 8,
+                           n_schedules=2 if quick else 4)
+    emit("fault_recovery_engine",
+         eng["recovery_latency_mean_s"] * 1e6,
+         f"complete={eng['all_complete']};"
+         f"identical={eng['streams_identical']};"
+         f"recovered={eng['total_recovered']};"
+         f"rec_lat_p95={eng['recovery_latency_p95_s']:.3f}s")
+
+    sim = _sim_recovery(20 if quick else 40)
+    emit("fault_recovery_sim",
+         sim["decoder_death"]["recovery_latency_mean_s"] * 1e6,
+         f"complete={sim['decoder_death']['completed']}"
+         f"/{sim['n_conversations']};"
+         f"recovered={sim['decoder_death']['n_recovered']};"
+         f"evictions={sim['tool_watchdog']['n_tool_evictions']};"
+         f"replayed={sim['decoder_death']['replayed_prefill_tokens']}tok")
+
+    payload = {"backend": jax.default_backend(), "quick": quick,
+               "engine": eng, "simulator": sim}
+    (BENCH_QUICK_PATH if quick else BENCH_PATH).write_text(
+        json.dumps(payload, indent=1))
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

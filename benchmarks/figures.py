@@ -373,8 +373,21 @@ def serve_overload_bench():
     serve_overload.main(quick=True)
 
 
+def fault_recovery_bench():
+    """Failure contract on both backends (writes BENCH_fault_recovery.json
+    at the repo root). Series: `fault_recovery_engine` (seeded decoder
+    deaths + one armed KV-transfer fault on the real disaggregated engine:
+    completion, byte-identity of recovered streams vs the failure-free run,
+    recovery-latency mean/p95, replayed prefill tokens) and
+    `fault_recovery_sim` (paper 4-GPU ConServe deployment: decoder death
+    mid-run and the tool-deadline watchdog variant — recovered counts,
+    evictions, replay charged to the prefiller)."""
+    from . import fault_recovery
+    fault_recovery.main(quick=True)
+
+
 ALL = [fig01_trace_dist, fig02_prefill_curve, fig03_kv_transfer,
        fig04_tbt_heatmap, fig05_collocation, fig06_tbt_variance,
        fig07_powercap_prefill, fig08_powercap_decode, fig10_agentic_perf,
        fig11_cdfs, fig12_wrong_prediction, fig13_hetero, decode_tail_bench,
-       prefill_path_bench, serve_overload_bench]
+       prefill_path_bench, serve_overload_bench, fault_recovery_bench]

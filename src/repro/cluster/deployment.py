@@ -19,7 +19,10 @@ def build_cluster(scheduler: Scheduler, *, n_prefill: int = 1,
                   decode_tier: HardwareTier = A40,
                   model: Optional[ServedModelProfile] = None,
                   decoder_chunk_tokens: int = 2944,
-                  chunk_tokens: int = 8192) -> ClusterSimulator:
+                  chunk_tokens: int = 8192,
+                  **sim_kwargs) -> ClusterSimulator:
+    """`sim_kwargs` pass through to ClusterSimulator (e.g. the failure
+    contract's `tool_deadline_s` / `tool_timeout_action`)."""
     model = model or ServedModelProfile()
     nodes: List[SimNode] = []
     nid = 0
@@ -39,19 +42,20 @@ def build_cluster(scheduler: Scheduler, *, n_prefill: int = 1,
                                                 decoder_chunk_tokens)))
         nid += 1
     return ClusterSimulator(scheduler, nodes, chunk_tokens=chunk_tokens,
-                            decoder_chunk_tokens=decoder_chunk_tokens)
+                            decoder_chunk_tokens=decoder_chunk_tokens,
+                            **sim_kwargs)
 
 
 def paper_deployment(system: str, *, heterogeneous: bool = False,
                      wrong_prediction_rate: float = 0.10,
-                     seed: int = 0) -> ClusterSimulator:
+                     seed: int = 0, **sim_kwargs) -> ClusterSimulator:
     """The four evaluated systems on the paper's 4-GPU box. `heterogeneous`
     caps the decoder tier to 200W (Fig. 13)."""
     dec_tier = A40_CAPPED if heterogeneous else A40
     if system == "collocated":
         sched = make_scheduler("collocated")
         return build_cluster(sched, n_prefill=0, n_decode=0, n_mixed=4,
-                             decode_tier=dec_tier)
+                             decode_tier=dec_tier, **sim_kwargs)
     if system == "conserve":
         sched = make_scheduler("conserve")
     elif system == "full_disagg":
@@ -63,4 +67,4 @@ def paper_deployment(system: str, *, heterogeneous: bool = False,
     else:
         raise ValueError(system)
     return build_cluster(sched, n_prefill=1, n_decode=3,
-                         decode_tier=dec_tier)
+                         decode_tier=dec_tier, **sim_kwargs)

@@ -109,8 +109,18 @@ class SimNode:
 class ClusterSimulator(Runtime):
     def __init__(self, scheduler: Scheduler, nodes: List[SimNode],
                  chunk_tokens: int = 8192, decoder_chunk_tokens: int = 2944,
-                 track_token_times: bool = False):
+                 track_token_times: bool = False,
+                 tool_deadline_s: Optional[float] = None,
+                 tool_timeout_action: str = "evict"):
+        """tool_deadline_s / tool_timeout_action: TOOL_WAIT watchdog, same
+        contract as EngineServer — off by default (None); "evict" frees the
+        waiting conversation's KV for parked work (the tool return re-admits
+        by deterministic replay, the dead-binding path), "fail" raises
+        loudly. Nothing parks forever on a tool that never returns."""
+        assert tool_timeout_action in ("evict", "fail")
         self.sched = scheduler
+        self.tool_deadline_s = tool_deadline_s
+        self.tool_timeout_action = tool_timeout_action
         self.nodes = {n.node_id: n for n in nodes}
         for n in nodes:
             cap = n.cost.kv_capacity_tokens()
@@ -137,6 +147,10 @@ class ClusterSimulator(Runtime):
         self.n_kv_transfers = 0
         self.bind_counts: Dict[int, int] = {}
         self.log: List[str] = []
+        # conversations evicted by the tool-deadline watchdog: their KV is
+        # gone but the binding is remembered; tool return recovers by replay
+        self._evicted: set = set()
+        self.n_tool_evictions = 0
 
     # ----- admission (Runtime contract) ----------------------------------------
     def _can_admit(self, node_id: int, adm: Admission) -> bool:
@@ -250,6 +264,13 @@ class ClusterSimulator(Runtime):
         node.integrate_energy(self.now, node.cost.tier.idle_w)
 
         def done():
+            if not node.alive:
+                # the prefiller died mid-job: the computation never landed —
+                # re-place the job on a healthy prefill-capable node
+                node.iterating = False
+                node.state.queued_prefill_tokens -= job.n_tokens
+                self._replace_prefill_job(node.node_id, job)
+                return
             node.integrate_energy(
                 self.now, node.cost.power_w(1.0, memory_bound=False))
             node.busy_s += dur
@@ -310,6 +331,13 @@ class ClusterSimulator(Runtime):
         conversation arrived) — queue and transfer waits count toward its
         TTFT."""
         node = self.nodes[node_id]
+        if not node.alive:
+            # the node died while this start was in flight (e.g. mid
+            # KV-transfer): the failure's victim scan only sees installed
+            # decode jobs, so the landing itself must observe the corpse —
+            # recover by replay instead of stranding a job nothing iterates
+            self._recover(conv, turn_idx)
+            return
         turn = conv.turns[turn_idx]
         ctx = sum(t.append_tokens + t.output_tokens
                   for t in conv.turns[: turn_idx + 1]) - turn.output_tokens
@@ -344,6 +372,10 @@ class ClusterSimulator(Runtime):
             self.sessions[conv.cid].turn_idx = dj.turn_idx + 1
             self.at(self.now + turn.tool_time_s,
                     lambda: self._on_turn_arrival(conv, dj.turn_idx + 1))
+            if self.tool_deadline_s is not None:
+                dl = self.now + self.tool_deadline_s
+                self.at(dl, lambda: self._tool_watchdog(
+                    conv, dj.turn_idx + 1, dl))
         else:
             self._finish_conversation(conv, node)
 
@@ -360,6 +392,12 @@ class ClusterSimulator(Runtime):
 
     def _on_turn_arrival(self, conv: Conversation, turn_idx: int):
         bound = self._bound[conv.cid]
+        if conv.cid in self._evicted:
+            # tool returned to an evicted binding (deadline watchdog freed
+            # the KV): re-admit by replay, exactly the dead-binding path
+            self._evicted.discard(conv.cid)
+            self._recover(conv, turn_idx)
+            return
         if not self.nodes[bound].alive:
             # tool returned to a dead binding: lazy recovery by replay
             self._recover(conv, turn_idx)
@@ -502,12 +540,25 @@ class ClusterSimulator(Runtime):
     # ----- faults / elasticity (observation-driven) ----------------------------
     def inject_failure(self, node_id: int, at_s: float):
         self.at(at_s, lambda: self._fail(node_id))
+        return self
+
+    # engine-API parity, so benchmarks drive both backends uniformly
+    fail_replica = inject_failure
 
     def _fail(self, node_id: int):
         node = self.nodes[node_id]
+        if not node.alive:
+            raise RuntimeError(f"node {node_id} failed twice")
         node.alive = False
         node.state.alive = False
         victims = {j.cid for j in node.decode_jobs.values()}
+        # a dead mixed node's in-iteration turn-1 prefills vanish with the
+        # decode jobs: release their share of the backlog observable (the
+        # victims re-place it on whatever node recovery chooses)
+        for dj in node.decode_jobs.values():
+            if getattr(dj, "_prefill_done", None) is not None:
+                node.state.queued_prefill_tokens = max(
+                    0, node.state.queued_prefill_tokens - dj.remaining_prefill)
         node.decode_jobs.clear()
         node.state.active_kv_tokens = 0
         node.state.active_conversations = 0
@@ -516,32 +567,102 @@ class ClusterSimulator(Runtime):
         self.log.append(f"t={self.now:.1f} node {node_id} FAILED; "
                         f"recovering {len(victims)} in-flight conversations "
                         f"by replay (tool-waiting ones recover lazily)")
+        # a dead prefiller's queued jobs never ran: re-place each on a
+        # healthy prefill-capable node (mid-flight jobs re-place from their
+        # completion callback, which observes the death)
+        if node.prefill_q:
+            jobs, node.prefill_q = list(node.prefill_q), []
+            for job in jobs:
+                node.state.queued_prefill_tokens -= job.n_tokens
+                self._replace_prefill_job(node_id, job)
         # work parked in the dead node's admission queue will never be
-        # pumped — re-place each waiting admission on a healthy node through
-        # the SAME scheduler decision point that placed it originally
-        for adm in self._admission[node_id].drain():
-            node.state.queued_conversations -= 1
-            cv = view_of(self._convs[adm.cid])
-            pl = (self.sched.place_first_prefill(cv, self.view)
-                  if adm.kind == "arrival"
-                  else self.sched.bind_decoder(cv, self.view))
-            self._offer(pl.node_id, adm, self.now)
+        # pumped — re-place each through the SAME scheduler decision point
+        # that placed it originally (shared Runtime mechanism; raises loudly
+        # when the target is dead too, or no healthy candidate exists)
+        self._drain_dead_node(node_id, self.now)
         for cid in victims:
             conv = self._convs[cid]
             done_turns = len(self._turn_recs[cid])
             self._recover(conv, min(done_turns, conv.n_turns - 1))
 
+    def _replace_admission(self, adm: Admission, now: float) -> Optional[int]:
+        """Re-place one admission drained off a dead node through the same
+        decision point that placed it (Runtime._drain_dead_node guards the
+        returned target)."""
+        cv = view_of(self._convs[adm.cid])
+        if adm.kind == "arrival":
+            return self.sched.place_first_prefill(cv, self.view).node_id
+        return self.sched.bind_decoder(cv, self.view).node_id
+
+    def _replace_prefill_job(self, dead_node_id: int, job: PrefillJob):
+        """Re-enqueue a dead prefiller's job on a healthy prefill-capable
+        node. The job's completion callback carries its continuation, so
+        the downstream bind/turn plumbing is untouched."""
+        pl = self.sched.place_first_prefill(view_of(self._convs[job.cid]),
+                                            self.view)
+        target = self.nodes[pl.node_id]
+        if not target.alive:
+            raise RuntimeError(
+                f"re-placement of prefill job for conversation {job.cid} "
+                f"off dead node {dead_node_id} chose node {pl.node_id}, "
+                f"which is also dead; schedulers must place on live nodes "
+                f"only")
+        self.log.append(f"t={self.now:.1f} re-placed prefill job "
+                        f"(cid {job.cid}) from dead node {dead_node_id} "
+                        f"onto node {pl.node_id}")
+        self._enqueue_prefill(target, job)
+
+    def _tool_watchdog(self, conv: Conversation, next_idx: int,
+                       deadline_t: float):
+        """TOOL_WAIT deadline (same contract as EngineServer._tool_watchdog):
+        fires `tool_deadline_s` after the session entered TOOL_WAIT before
+        turn `next_idx`. No-op when the tool already returned (or the
+        binding died/was evicted in the meantime); otherwise evicts the
+        conversation's KV for waiting work, or fails loudly."""
+        cid = conv.cid
+        sess = self.sessions[cid]
+        if (sess.state != TOOL_WAIT or sess.turn_idx != next_idx
+                or cid in self._evicted):
+            return
+        bound = self._bound.get(cid)
+        if bound is None or not self.nodes[bound].alive:
+            return  # binding already dead; the tool return replays anyway
+        if self.tool_timeout_action == "fail":
+            raise RuntimeError(
+                f"conversation {cid} exceeded the tool deadline: turn "
+                f"{next_idx} still TOOL_WAIT at t={deadline_t:.3f} "
+                f"(tool_deadline_s={self.tool_deadline_s}); "
+                f"tool_timeout_action='fail'")
+        node = self.nodes[bound]
+        ctx = sum(t.append_tokens + t.output_tokens
+                  for t in conv.turns[:next_idx])
+        node.state.active_kv_tokens -= ctx
+        node.state.active_conversations -= 1
+        node.state.used_slots = max(0, node.state.used_slots - 1)
+        self._evicted.add(cid)
+        self.records[cid].n_tool_evictions += 1
+        self.n_tool_evictions += 1
+        self.log.append(
+            f"t={deadline_t:.3f} tool deadline: evicted cid {cid} from "
+            f"node {bound} (turn {next_idx} still waiting); KV freed for "
+            f"parked work, tool return re-admits by replay")
+        self._pump(bound, self.now)
+
     def _recover(self, conv: Conversation, turn_idx: int):
         """Deterministic replay: re-prefill the journaled context on the
         prefiller, rebind to a healthy decoder (exactly ConServe's one-shot
-        mechanism), then resume the interrupted/pending turn."""
+        mechanism), then resume the interrupted/pending turn. Replay tokens
+        are charged to the prefiller's `replayed_prefill_tokens`, and the
+        trigger->resume latency to the record's `recovery_latency_s`."""
         self.records[conv.cid].recovered = True
+        t0 = self.now
         self.sessions[conv.cid].transition(PREFILLING, self.now, force=True)
         ctx = sum(t.append_tokens + t.output_tokens
                   for t in conv.turns[:turn_idx]) \
             + conv.turns[turn_idx].append_tokens
         pl = self.sched.place_first_prefill(view_of(conv), self.view)
         pf = self.nodes[pl.node_id]
+        pf.state.replayed_prefill_tokens += ctx
 
         def redo(t, conv=conv, turn_idx=turn_idx, ctx=ctx):
             pl2 = self.sched.bind_decoder(view_of(conv), self.view)
@@ -555,16 +676,27 @@ class ClusterSimulator(Runtime):
             dec2.state.used_slots += 1
             delay = self._transfer(ctx, dec2) if pl2.kv_transfer else 0.0
             self.at(t + delay,
-                    lambda: self._resume_turn(conv, turn_idx, pl2.node_id))
+                    lambda: self._resume_turn(conv, turn_idx, pl2.node_id,
+                                              t0))
 
         job = PrefillJob(cid=conv.cid, turn_idx=turn_idx, n_tokens=ctx,
                          context_tokens=ctx, enqueued_s=self.now,
                          on_done=redo)
         self._enqueue_prefill(pf, job)
 
-    def _resume_turn(self, conv: Conversation, turn_idx: int, node_id: int):
+    def _resume_turn(self, conv: Conversation, turn_idx: int, node_id: int,
+                     recover_t0: Optional[float] = None):
         node = self.nodes[node_id]
+        if not node.alive:
+            # the recovery target itself died before the resume landed:
+            # recover again toward whatever is still healthy (the first
+            # attempt's latency stays open — only successful resumes close)
+            self._recover(conv, turn_idx)
+            return
         turn = conv.turns[turn_idx]
+        if recover_t0 is not None:
+            self.records[conv.cid].recovery_latency_s.append(
+                self.now - recover_t0)
         self.sessions[conv.cid].transition(DECODING, self.now, force=True)
         dj = DecodeJob(cid=conv.cid, turn_idx=turn_idx, remaining_prefill=0,
                        remaining_decode=turn.output_tokens,

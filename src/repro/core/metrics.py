@@ -47,6 +47,10 @@ class ConversationRecord:
     n_kv_transfers: int = 0
     n_remote_turns: int = 0
     recovered: bool = False  # re-prefilled after a decoder failure
+    # one entry per recovery: trigger (replica death / tool return to a dead
+    # or evicted binding) -> decode of the interrupted turn resumed
+    recovery_latency_s: List[float] = dataclasses.field(default_factory=list)
+    n_tool_evictions: int = 0  # tool-deadline watchdog freed this slot
 
     @property
     def done(self) -> bool:
@@ -114,6 +118,17 @@ def summarize(recs: Sequence[ConversationRecord],
         "remote_turns_per_conv": float(np.mean(
             [r.n_remote_turns for r in recs])) if recs else 0.0,
     }
+    # failure-recovery view: how many conversations replayed, and how long
+    # each recovery took (trigger -> interrupted turn's decode resumed).
+    # Keys are always present (stable benchmark schemas); zeros when the
+    # run was failure-free.
+    rec_lat = [l for r in recs for l in r.recovery_latency_s]
+    out.update({
+        "n_recovered": int(sum(r.recovered for r in recs)),
+        "n_tool_evictions": int(sum(r.n_tool_evictions for r in recs)),
+        "recovery_latency_mean_s": float(np.mean(rec_lat)) if rec_lat else 0.0,
+        "recovery_latency_p95_s": p95(rec_lat) if rec_lat else 0.0,
+    })
     if slo is not None:
         out.update({f"slo_viol_{k}": v
                     for k, v in slo.violations(recs).items()})

@@ -26,13 +26,34 @@ Schedulers stay pure policies over `ClusterView`: the only new decision
 point is `Scheduler.reoffer_admission`, called when a node frees capacity
 with work waiting — the default (None) admits in FIFO order, so ConServe
 and the baselines run unmodified.
+
+Failure contract (both backends): the conversation is the unit of recovery
+because it is the unit whose state is fully OBSERVABLE — a journal of the
+completed turns' token transcripts (`ConversationJournal`) plus the
+deterministic per-(cid, turn) turn inputs is everything needed to rebuild a
+dead node's KV by re-prefilling, through the same admission path as an
+arrival. Concretely:
+
+* a victim session REWINDS with `transition(QUEUED, t, force=True)` — the
+  rewind appends to `history` (never erases it), so `time_in`/`queue_wait_s`
+  remain measurements across a failure;
+* the dead node's parked admissions are re-placed through the SAME scheduler
+  decision point that placed them originally (`Runtime._drain_dead_node`
+  below, the shared mechanism) — never silently dropped, and never re-parked
+  on a node that is itself dead: with overlapping failures the cluster can
+  legitimately have no healthy target, and that raises loudly instead of
+  rotting in a dead queue;
+* replay compute is charged to dedicated observables
+  (`NodeState.replayed_prefill_tokens`, `ConversationRecord.recovered` /
+  `.recovery_latency_s`), never to the victim's TTFET history.
 """
 from __future__ import annotations
 
 import abc
 import dataclasses
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
+                    Tuple)
 
 # ----- session states --------------------------------------------------------
 QUEUED = "QUEUED"              # submitted / waiting for admission
@@ -76,7 +97,15 @@ class ServeSession:
 
     def transition(self, state: str, t: float, *, force: bool = False):
         """Enter `state` at time `t`. Raises on an illegal transition unless
-        `force` (failure recovery legitimately rewinds a session)."""
+        `force` (failure recovery legitimately rewinds a session).
+
+        Entry timestamps are clamped monotone non-decreasing against the
+        session's own history. Normal serving already satisfies this (each
+        stage's stamp is at or after the previous stage's); a failure REWIND
+        interleaves with logically-later completions — e.g. a staged decode
+        stamped at its future prefill-completion time when the replica dies
+        just before that instant — and the clamp keeps every dwell
+        (`time_in`) a non-negative measurement rather than erasing history."""
         if state == self.state:
             return
         if not force and state not in _ALLOWED[self.state]:
@@ -85,7 +114,7 @@ class ServeSession:
                 f"{self.state} -> {state} (allowed: "
                 f"{', '.join(_ALLOWED[self.state]) or 'none'})")
         self.state = state
-        self.history.append((state, t))
+        self.history.append((state, max(t, self.history[-1][1])))
 
     def time_in(self, state: str, now: Optional[float] = None) -> float:
         """Total seconds spent in `state` over the session's closed history
@@ -174,6 +203,54 @@ class AdmissionQueue:
         return out
 
 
+# ----- journal ---------------------------------------------------------------
+class ConversationJournal:
+    """Per-conversation transcript journal: the token stream each COMPLETED
+    turn fed into the KV cache, keyed (cid, turn_idx). Together with the
+    deterministic turn inputs this is sufficient to rebuild a conversation's
+    exact KV state on any replica by re-prefilling — deterministic replay,
+    the paper's recovery mechanism, with zero prediction involved.
+
+    The engine records each turn's SAMPLED stream here at turn completion
+    (the stream is ``[prefill argmax] + decoded tokens``, length n+1; the
+    last sampled token of a turn is never fed back, so the KV-fed slice is
+    ``stream[:-1]``). The simulator's journal is implicit — its cost model
+    tracks token COUNTS, so `_recover`'s context arithmetic plays the same
+    role — but both backends share the contract: completed turns are
+    journaled, in-flight turns are not (their partial output is discarded
+    and re-decoded, which determinism makes byte-identical).
+
+    Entries are dropped at conversation DONE to bound memory to live work."""
+
+    def __init__(self):
+        self._streams: Dict[Tuple[int, int], Any] = {}
+
+    def record(self, cid: int, turn_idx: int, stream: Sequence[int]):
+        """Journal a completed turn's full sampled stream. Re-recording the
+        same turn (it completed once; recovery replays only in-flight turns)
+        would mean non-deterministic replay — kept loud."""
+        key = (cid, turn_idx)
+        if key in self._streams:
+            raise RuntimeError(
+                f"turn {turn_idx} of conversation {cid} journaled twice — "
+                f"a completed turn must never re-run")
+        self._streams[key] = list(stream)
+
+    def fed_tokens(self, cid: int, turn_idx: int) -> List[int]:
+        """The tokens turn `turn_idx` fed into the KV cache (the sampled
+        stream minus its final token, which was never appended)."""
+        return self._streams[(cid, turn_idx)][:-1]
+
+    def n_completed(self, cid: int) -> int:
+        """Completed (journaled) turns for `cid`. Turns complete in order,
+        so this is also the index of the first un-journaled turn."""
+        return sum(1 for (c, _) in self._streams if c == cid)
+
+    def drop(self, cid: int):
+        for key in [k for k in self._streams if k[0] == cid]:
+            del self._streams[key]
+
+
 class Runtime(abc.ABC):
     """Serving contract both backends implement. Subclasses provide:
 
@@ -240,11 +317,51 @@ class Runtime(abc.ABC):
         self.sessions[cid] = sess
         return sess
 
+    # ----- failure mechanism -------------------------------------------------
+    def _replace_admission(self, adm: Admission, now: float) -> Optional[int]:
+        """Re-place one admission drained from a dead node's queue through
+        the SAME scheduler decision point that placed it originally (`kind`
+        records which). Return the new target node id, or None when the
+        backend re-dispatched the work some other way (e.g. re-planning a
+        turn placement from scratch). Backends with failure semantics
+        override; the base raises so a backend can't silently drop work."""
+        raise NotImplementedError(
+            f"{type(self).__name__} drained a dead node's admission queue "
+            f"but implements no _replace_admission")
+
+    def _drain_dead_node(self, node_id: int, now: float):
+        """Shared failure semantics: a dead node's parked admissions would
+        never be pumped — drain them and re-place each via
+        `_replace_admission`, guarding the result. With overlapping failures
+        the chosen target can itself be dead, or the cluster may have no
+        healthy candidate at all (the scheduler helpers raise); both must
+        fail loudly here instead of re-parking work on a corpse."""
+        st = self.view.node(node_id)
+        for adm in self._admission[node_id].drain():
+            st.queued_conversations -= 1
+            target = self._replace_admission(adm, now)
+            if target is None:
+                continue
+            if not self.view.node(target).alive:
+                raise RuntimeError(
+                    f"re-placement of conversation {adm.cid} "
+                    f"({adm.kind}) off dead node {node_id} chose node "
+                    f"{target}, which is also dead; schedulers must place "
+                    f"on live nodes only")
+            self._on_reoffer_move(adm, node_id, target)
+            self._offer(target, adm, now)
+
     def _offer(self, node_id: int, adm: Admission, now: float) -> bool:
         """Admit `adm` on `node_id` immediately if it has capacity and no one
         is already waiting (FIFO fairness); otherwise park it in the node's
         admission queue and flip the session to QUEUED. Returns True when the
         work ran now."""
+        if not self.view.node(node_id).alive:
+            # work offered to a dead node would park in a queue nothing ever
+            # pumps — every placement path must name a live node
+            raise RuntimeError(
+                f"admission for conversation {adm.cid} ({adm.kind}) offered "
+                f"to dead node {node_id}; placements must name a live node")
         q = self._admission[node_id]
         # evaluate capacity even when others are waiting: _can_admit is also
         # where work that can NEVER fit raises — that must happen at offer

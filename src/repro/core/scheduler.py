@@ -91,6 +91,13 @@ class Scheduler(abc.ABC):
         pf = view.nodes("prefill")
         if not pf:  # collocated deployments have no dedicated prefiller
             pf = view.nodes("mixed")
+        if not pf:
+            # view.nodes() filters dead nodes: overlapping failures can
+            # leave no prefill-capable node at all — name the condition
+            # instead of a bare min() ValueError
+            raise RuntimeError(
+                "no healthy prefill-capable node (prefill or mixed) left "
+                "in the cluster; cannot place prefill work")
         return min(pf, key=lambda n: n.queued_prefill_tokens).node_id
 
     @staticmethod
@@ -100,6 +107,10 @@ class Scheduler(abc.ABC):
         factor × pool median are excluded from NEW bindings — observation-
         based straggler mitigation (no prediction involved)."""
         ds = view.nodes("decode")
+        if not ds:
+            raise RuntimeError(
+                "no healthy decoder left in the cluster; cannot bind "
+                "conversations (view.nodes() filters dead nodes)")
         if straggler_factor:
             med = view.median_decoder_tbt()
             if med > 0:

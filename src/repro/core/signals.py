@@ -80,6 +80,11 @@ class NodeState:
     # health (observation-based straggler signal)
     observed_tbt_ema_s: float = 0.0
     alive: bool = True
+    # failure-recovery observable: prefill tokens this node computed to
+    # REBUILD journaled context after a replica death or tool-deadline
+    # eviction — replay work is charged here, never to the victim
+    # conversation's TTFET history (Maestro-style honest recovery cost)
+    replayed_prefill_tokens: int = 0
 
     @property
     def kv_utilization(self) -> float:

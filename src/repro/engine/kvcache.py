@@ -180,6 +180,15 @@ class SlotKVCache:
         self.active[slot] = False
         self.lengths[slot] = 0
 
+    def invalidate_all(self):
+        """Replica failure: every slot's contents are gone at once. Host
+        bookkeeping zeroes so the observables mirror the dead cache (strict
+        accounting keeps checking dead replicas); the device buffers stay
+        allocated — stale bytes on a dead replica are unreachable, and a
+        revived replica would re-prefill before any read."""
+        self.active[:] = False
+        self.lengths[:] = 0
+
     @property
     def active_kv_tokens(self) -> int:
         return int(self.lengths[self.active].sum())

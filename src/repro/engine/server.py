@@ -59,9 +59,10 @@ import numpy as np
 
 from repro.core.conversation import Conversation, TurnView, view_of
 from repro.core.metrics import ConversationRecord, TurnRecord
-from repro.core.runtime import (Admission, AdmissionQueue, DECODING, DONE,
-                                PREFILLING, Runtime, ServeSession, TOOL_WAIT,
-                                TRANSFERRING)
+from repro.core.runtime import (Admission, AdmissionQueue,
+                                ConversationJournal, DECODING, DONE,
+                                PREFILLING, QUEUED, Runtime, ServeSession,
+                                TOOL_WAIT, TRANSFERRING)
 from repro.core.scheduler import Scheduler
 from repro.core.signals import ClusterView, NodeState, PrefillLatencyCurve
 
@@ -77,6 +78,13 @@ class _TurnTask:
     next_token: int
     first_token_t: Optional[float] = None
     arrival_t: float = 0.0
+    # every sampled token of this turn so far ([prefill argmax] + decoded),
+    # journaled at turn completion — the engine's failure-recovery transcript
+    stream: List[int] = dataclasses.field(default_factory=list)
+    # recovery generation of the conversation when this task was built:
+    # finish events carrying a stale generation are dropped (the turn was
+    # rewound and is being replayed)
+    gen: int = 0
 
 
 class EngineServer(Runtime):
@@ -85,7 +93,11 @@ class EngineServer(Runtime):
                  max_decode_chunk: int = 32, decode_mode: str = "fused",
                  record_tokens: bool = False, strict_accounting: bool = False,
                  rotation: bool = True, rotation_min_chunk: int = 16,
-                 prefill_mode: Optional[str] = None):
+                 prefill_mode: Optional[str] = None,
+                 tool_deadline_s: Optional[float] = None,
+                 tool_timeout_action: str = "evict",
+                 max_transfer_retries: int = 3,
+                 transfer_retry_backoff_s: float = 0.01):
         """decode_mode: "fused" runs up to `max_decode_chunk` tokens per
         dispatch through the donated in-place RAGGED scan (`decode_steps`):
         each slot consumes only its own per-slot share, and turns that
@@ -116,9 +128,22 @@ class EngineServer(Runtime):
         prefill_mode: None (default) leaves each replica's own mode in
         place; "jit" / "reference" overrides every replica — "reference"
         replays the eager per-op (append-)prefill path as the parity
-        oracle (see ReplicaEngine.prefill_mode)."""
+        oracle (see ReplicaEngine.prefill_mode).
+        tool_deadline_s: TOOL_WAIT watchdog (off by default, None). A
+        session whose tool call has not returned `tool_deadline_s` seconds
+        after entering TOOL_WAIT is acted on per `tool_timeout_action`:
+        "evict" frees its KV slot for waiting work (the tool return
+        re-admits by journaled replay through the arrival admission path);
+        "fail" raises loudly naming the conversation. Either way nothing
+        parks forever on a tool that never comes back.
+        max_transfer_retries / transfer_retry_backoff_s: bound on one-shot
+        KV-transfer attempts per binding (see `inject_transfer_faults`);
+        each failed attempt backs off exponentially from the base and
+        re-asks `Scheduler.bind_decoder` for a (possibly different)
+        decoder. Exhausting the bound raises loudly."""
         assert decode_mode in ("fused", "reference")
         assert prefill_mode in (None, "jit", "reference")
+        assert tool_timeout_action in ("evict", "fail")
         if prefill_mode is not None:
             for r in replicas:
                 r.prefill_mode = prefill_mode
@@ -172,6 +197,28 @@ class EngineServer(Runtime):
         self._now = 0.0
         self.transfer_bytes = 0.0
         self.n_transfers = 0
+        # ----- failure contract state -----
+        self.tool_deadline_s = tool_deadline_s
+        self.tool_timeout_action = tool_timeout_action
+        self.max_transfer_retries = int(max_transfer_retries)
+        self.transfer_retry_backoff_s = float(transfer_retry_backoff_s)
+        self.journal = ConversationJournal()
+        self._convs: Dict[int, Conversation] = {}
+        # recovery generation per cid: bumped at every rewind so in-flight
+        # finish events from before the failure are recognizably stale
+        self._gen: Dict[int, int] = {}
+        # arrival_t of each conversation's CURRENT in-flight turn (lets a
+        # failure rewind keep the turn's original TTFT reference point)
+        self._turn_arrival: Dict[int, float] = {}
+        # recovery trigger time per cid (failure, or tool return to a dead/
+        # evicted binding) — closed into recovery_latency_s at re-bind
+        self._recover_t0: Dict[int, float] = {}
+        self._bind_attempts: Dict[int, int] = {}
+        self._transfer_fault_budget = 0
+        self.n_transfer_retries = 0
+        self.n_tool_evictions = 0
+        self.n_recoveries = 0
+        self.log: List[str] = []
         # sampled token stream per (cid, turn_idx) when record_tokens is
         # set — first token from the turn's prefill, then every decoded
         # token in order (lets tests assert end-to-end token equality
@@ -200,6 +247,7 @@ class EngineServer(Runtime):
     # ----- Runtime protocol --------------------------------------------------------
     def submit(self, convs: List[Conversation]) -> "EngineServer":
         for c in convs:
+            self._convs[c.cid] = c
             self.records[c.cid] = ConversationRecord(c.cid, c.arrival_s)
             self._make_session(c.cid, c.arrival_s)
             self._push(c.arrival_s, lambda c=c: self._arrive(c))
@@ -338,12 +386,51 @@ class EngineServer(Runtime):
                     done_t)
 
     def _transfer_bind(self, conv: Conversation, node_id: int, pkg,
-                       next_tok: int, t: float):
+                       next_tok: int, t: float, turn_idx: int = 0,
+                       arrival_t: Optional[float] = None):
         """One-shot KV transfer onto the admitted decoder (t = when the
-        package starts moving: prefill completion, or the later admission)."""
+        package starts moving: prefill completion, or the later admission;
+        turn_idx > 0 when the binding resumes a failure-recovered turn).
+        An armed transfer fault (`inject_transfer_faults`) kills the attempt
+        before any KV lands; the binding retries with exponential backoff on
+        a decoder the scheduler chooses fresh, bounded by
+        `max_transfer_retries` — then fails loudly."""
         dec = self.replicas[node_id]
         st = self.states[node_id]
         self.sessions[conv.cid].transition(TRANSFERRING, t)
+        if self._transfer_fault_budget > 0:
+            self._transfer_fault_budget -= 1
+            self.n_transfer_retries += 1
+            attempt = self._bind_attempts.get(conv.cid, 0) + 1
+            self._bind_attempts[conv.cid] = attempt
+            if attempt > self.max_transfer_retries:
+                raise RuntimeError(
+                    f"KV transfer for conversation {conv.cid} failed on "
+                    f"{attempt} consecutive attempts "
+                    f"(max_transfer_retries={self.max_transfer_retries}); "
+                    f"giving up loudly")
+            backoff = self.transfer_retry_backoff_s * (2 ** (attempt - 1))
+            self.log.append(
+                f"t={t:.3f} KV transfer to replica {node_id} FAILED for "
+                f"cid {conv.cid} (attempt {attempt}); retrying in "
+                f"{backoff:.3f}s")
+
+            def retry(conv=conv, pkg=pkg, nt=next_tok, idx=turn_idx,
+                      at=arrival_t):
+                # re-ask the scheduler at RETRY time: the view may have
+                # changed (the faulty target may be gone or full)
+                pl = self.sched.bind_decoder(view_of(conv), self.view)
+                self._offer(pl.node_id,
+                            Admission(conv.cid, pkg["length"],
+                                      lambda nid: self._transfer_bind(
+                                          conv, nid, pkg, nt,
+                                          max(t + backoff, self._now),
+                                          turn_idx=idx, arrival_t=at)),
+                            self._now)
+
+            self._push(t + backoff, retry)
+            return
+        self._bind_attempts.pop(conv.cid, None)
         dslot = dec.kv.acquire()
         st.used_slots += 1
         dec.kv.import_slot(dslot, pkg)
@@ -353,14 +440,20 @@ class EngineServer(Runtime):
         self.n_transfers += 1
         self.records[conv.cid].n_kv_transfers += 1
         xfer_t = nbytes / self.link_bw + 0.005
-        self._bind_done(conv, node_id, dslot, next_tok, t + xfer_t)
+        self._bind_done(conv, node_id, dslot, next_tok, t + xfer_t,
+                        turn_idx=turn_idx, arrival_t=arrival_t)
 
-    def _bind_done(self, conv, node_id, slot, next_tok, t):
+    def _bind_done(self, conv, node_id, slot, next_tok, t, turn_idx: int = 0,
+                   arrival_t: Optional[float] = None):
         self._slots[conv.cid] = (node_id, slot)
         self.sessions[conv.cid].node_id = node_id
         st = self.states[node_id]
         st.active_conversations += 1
-        self._begin_decode(conv, 0, next_tok, t)
+        t0 = self._recover_t0.pop(conv.cid, None)
+        if t0 is not None:
+            # recovery closed: trigger -> interrupted turn's decode runnable
+            self.records[conv.cid].recovery_latency_s.append(t - t0)
+        self._begin_decode(conv, turn_idx, next_tok, t, arrival_t=arrival_t)
 
     # ----- decode ---------------------------------------------------------------------
     def _begin_decode(self, conv, turn_idx, next_tok, ready_t,
@@ -382,9 +475,14 @@ class EngineServer(Runtime):
         task = _TurnTask(conv=conv, turn_idx=turn_idx, slot=slot,
                          remaining=conv.turns[turn_idx].output_tokens,
                          next_token=next_tok,
-                         arrival_t=ready_t if arrival_t is None else arrival_t)
+                         arrival_t=ready_t if arrival_t is None else arrival_t,
+                         stream=[next_tok],
+                         gen=self._gen.get(conv.cid, 0))
+        self._turn_arrival[conv.cid] = task.arrival_t
         if self.record_tokens:
-            self.sampled_tokens[(conv.cid, turn_idx)] = [next_tok]
+            # alias the task's live stream: a failure rewind rebuilds the
+            # task, so the dict always points at the CURRENT attempt's tokens
+            self.sampled_tokens[(conv.cid, turn_idx)] = task.stream
         if self.rotation:
             self._ready[node_id].append((ready_t, next(self._seq), task))
             self._kick(node_id, ready_t)
@@ -436,6 +534,8 @@ class EngineServer(Runtime):
 
     def _iterate(self, node_id: int):
         node = self.replicas[node_id]
+        if not self.states[node_id].alive:
+            return  # stale chunk-cut event for a replica that since died
         if self.rotation:
             # one chunk cut: refill the batch from both supplies before
             # sizing the chunk. Suppress re-kicks while cutting — staging
@@ -537,9 +637,7 @@ class EngineServer(Runtime):
                 task.first_token_t = start + per_tok
             task.remaining -= took
             task.next_token = int(seq[took - 1, slot])
-            if self.record_tokens:
-                self.sampled_tokens[(task.conv.cid, task.turn_idx)].extend(
-                    int(t) for t in seq[:took, slot])
+            task.stream.extend(int(t) for t in seq[:took, slot])
             st.active_kv_tokens += took
             if task.remaining <= 0:
                 # mid-chunk finish: this turn's last token landed at step
@@ -566,18 +664,34 @@ class EngineServer(Runtime):
 
     def _finish_turn(self, task: _TurnTask, t: float):
         conv, idx = task.conv, task.turn_idx
+        if task.gen != self._gen.get(conv.cid, 0):
+            # finish event from before a failure rewound this conversation:
+            # the turn's partial output was discarded and is being replayed
+            # (the replayed finish will land with the current generation)
+            return
         turn = conv.turns[idx]
         sess = self.sessions[conv.cid]
+        self.journal.record(conv.cid, idx, task.stream)
         self.records[conv.cid].turns.append(TurnRecord(
             turn_idx=idx, arrival_s=task.arrival_t,
             first_token_s=task.first_token_t, last_token_s=t,
             n_output_tokens=turn.output_tokens))
         if idx + 1 < conv.n_turns:
             sess.transition(TOOL_WAIT, t)
+            sess.turn_idx = idx + 1
             ready = t + turn.tool_time_s
             self._push(ready, lambda: self._next_turn(conv, idx + 1, ready))
+            if self.tool_deadline_s is not None:
+                self._push(t + self.tool_deadline_s,
+                           lambda gen=task.gen:
+                           self._tool_watchdog(conv, idx + 1, gen,
+                                               t + self.tool_deadline_s))
         else:
             sess.transition(DONE, t)
+            self.journal.drop(conv.cid)
+            self._turn_arrival.pop(conv.cid, None)
+            # _gen is kept: a pre-rewind finish event can still be in the
+            # heap after DONE, and must keep reading as stale
             node_id, slot = self._slots.pop(conv.cid)
             node = self.replicas[node_id]
             st = self.states[node_id]
@@ -593,7 +707,16 @@ class EngineServer(Runtime):
 
     # ----- turn 2+ --------------------------------------------------------------------
     def _next_turn(self, conv: Conversation, idx: int, ready_t: float):
-        node_id, slot = self._slots[conv.cid]
+        binding = self._slots.get(conv.cid)
+        if binding is None or not self.states[binding[0]].alive:
+            # the tool returned to a dead binding (replica failed during
+            # TOOL_WAIT) or an evicted one (tool-deadline watchdog freed the
+            # slot): lazy recovery by journaled replay, mirroring the
+            # simulator's _on_turn_arrival. The turn becomes runnable NOW,
+            # so its TTFT reference point is ready_t.
+            self._recover(conv, idx, ready_t)
+            return
+        node_id, slot = binding
         node = self.replicas[node_id]
         ctx = int(node.kv.lengths[slot])
         tv = TurnView(cid=conv.cid, turn_idx=idx,
@@ -621,7 +744,8 @@ class EngineServer(Runtime):
                     Admission(conv.cid, ctx + len(tokens),
                               lambda nid, conv=conv, idx=idx:
                               self._remote_turn(conv, idx, nid,
-                                                max(ready_t, self._now))),
+                                                max(ready_t, self._now)),
+                              kind="turn"),
                     self._now)
 
     def _remote_turn(self, conv: Conversation, idx: int, remote_id: int,
@@ -659,3 +783,223 @@ class EngineServer(Runtime):
         self.states[node_id].active_kv_tokens += len(tokens)
         self._pump(remote_id, self._now)
         self._begin_decode(conv, idx, int(next_tok), done, arrival_t=ready_t)
+
+    # ----- failure contract -----------------------------------------------------------
+    def fail_replica(self, node_id: int, at_s: float) -> "EngineServer":
+        """Schedule replica `node_id` to die at logical time `at_s`. Same
+        injection API as ClusterSimulator.inject_failure: every in-flight
+        conversation on the dead replica recovers by deterministic journaled
+        replay on a healthy one, and parked admissions re-place through the
+        same scheduler decision points that placed them."""
+        self._push(at_s, lambda: self._fail(node_id))
+        return self
+
+    # simulator-API parity, so benchmarks drive both backends uniformly
+    inject_failure = fail_replica
+
+    def _fail(self, node_id: int):
+        node = self.replicas[node_id]
+        st = self.states[node_id]
+        if not st.alive:
+            raise RuntimeError(f"replica {node_id} failed twice")
+        st.alive = False
+        # find the victims BEFORE tearing state down. Only DECODING sessions
+        # need immediate replay (staged ready turns included — their session
+        # is already DECODING); TOOL_WAIT sessions hold no runnable work and
+        # recover lazily when their tool returns to the dead binding.
+        # PREFILLING/TRANSFERRING run synchronously inside one event, so no
+        # session can be caught mid-stage at an event boundary.
+        victims = []
+        for cid, (nid, _slot) in self._slots.items():
+            if nid != node_id:
+                continue
+            sess = self.sessions[cid]
+            if sess.state == DECODING:
+                victims.append((self._convs[cid], sess.turn_idx,
+                                self._turn_arrival.get(cid, self._now)))
+        # the replica's KV is gone at once: invalidate every slot and zero
+        # the mirroring observables wholesale (strict accounting keeps
+        # checking dead replicas against exactly this ground truth)
+        node.kv.invalidate_all()
+        st.active_kv_tokens = 0
+        st.used_slots = 0
+        st.active_conversations = 0
+        st.reserved_kv_tokens = 0
+        self._decode_q[node_id] = []
+        self._ready[node_id] = []
+        self._iter_at[node_id] = None
+        self.log.append(
+            f"t={self._now:.3f} replica {node_id} FAILED; replaying "
+            f"{len(victims)} in-flight conversations on healthy replicas "
+            f"(tool-waiting ones recover lazily)")
+        # parked admissions would never be pumped: re-place each through the
+        # SAME decision point that placed it (shared Runtime mechanism —
+        # raises loudly if no healthy target exists)
+        self._drain_dead_node(node_id, self._now)
+        for conv, turn_idx, arrival_t in victims:
+            self._recover(conv, turn_idx, arrival_t)
+
+    def _recover(self, conv: Conversation, turn_idx: int, arrival_t: float):
+        """Deterministic replay of conversation `conv` interrupted at turn
+        `turn_idx`: rewind the session (force=True), rebuild the journaled
+        context by re-prefilling it on a scheduler-chosen healthy replica
+        through the arrival admission path (same backpressure as a fresh
+        conversation), then resume the interrupted turn's decode. Replica
+        determinism makes the recovered token streams byte-identical to a
+        failure-free run; replay compute is charged to
+        `replayed_prefill_tokens`, never to the victim's turn records."""
+        cid = conv.cid
+        self._gen[cid] = self._gen.get(cid, 0) + 1
+        self._slots.pop(cid, None)
+        rec = self.records[cid]
+        rec.recovered = True
+        self.n_recoveries += 1
+        self._recover_t0[cid] = self._now
+        sess = self.sessions[cid]
+        sess.node_id = None
+        sess.turn_idx = turn_idx
+        sess.transition(QUEUED, self._now, force=True)
+        ctx = self._journal_context(conv, turn_idx)
+        self.log.append(
+            f"t={self._now:.3f} recovering cid {cid} at turn {turn_idx}: "
+            f"re-prefilling {len(ctx)} journaled context tokens")
+        pl = self.sched.place_first_prefill(view_of(conv), self.view)
+        # replay backlog is real prefill backlog — schedulers must see it
+        self.states[pl.node_id].queued_prefill_tokens += len(ctx)
+        self._offer(pl.node_id,
+                    Admission(cid, len(ctx),
+                              lambda nid, conv=conv, idx=turn_idx,
+                              at=arrival_t:
+                              self._replay_prefill(conv, idx, nid, at),
+                              kind="arrival"),
+                    self._now)
+
+    def _journal_context(self, conv: Conversation, turn_idx: int
+                         ) -> np.ndarray:
+        """The exact token sequence whose prefill rebuilds `conv`'s KV for
+        resuming turn `turn_idx`: each completed turn's deterministic input
+        followed by its journaled KV-fed stream, then the interrupted turn's
+        input. Byte-identity of the replay rests on this being exact, so a
+        journal/turn mismatch is kept loud."""
+        done = self.journal.n_completed(conv.cid)
+        if done != turn_idx:
+            raise RuntimeError(
+                f"journal holds {done} completed turns for conversation "
+                f"{conv.cid} but recovery targets turn {turn_idx}")
+        parts = []
+        for t in range(turn_idx):
+            parts.append(self._turn_tokens(conv, t))
+            parts.append(np.asarray(
+                self.journal.fed_tokens(conv.cid, t), np.int32))
+        parts.append(self._turn_tokens(conv, turn_idx))
+        return np.concatenate(parts) if len(parts) > 1 else parts[0]
+
+    def _replay_prefill(self, conv: Conversation, turn_idx: int,
+                        node_id: int, arrival_t: float):
+        """Admitted recovery prefill: rebuild the journaled context in one
+        AOT prefill dispatch, then rebind exactly like a turn-1 prefill —
+        stay put on a decode-capable node, or one-shot transfer to a
+        scheduler-chosen decoder."""
+        node = self.replicas[node_id]
+        st = self.states[node_id]
+        start = max(self._now, self.clock[node_id])
+        self.sessions[conv.cid].transition(PREFILLING, start)
+        slot = node.kv.acquire()
+        st.used_slots += 1
+        ctx = self._journal_context(conv, turn_idx)
+        fe = None
+        if node.cfg.frontend != "none":
+            fe = jnp.zeros((1, node.cfg.frontend_len or node.cfg.encoder_seq,
+                            node.cfg.d_model), node.cfg.jnp_dtype)
+        next_tok, dt = node.prefill_conversation(slot, ctx, fe)
+        done_t = start + dt
+        self.clock[node_id] = done_t
+        st.queued_prefill_tokens -= len(ctx)
+        st.replayed_prefill_tokens += len(ctx)
+        written = int(node.kv.lengths[slot])
+        st.active_kv_tokens += written
+        if node.role in ("decode", "mixed"):
+            self._bind_done(conv, node_id, slot, int(next_tok), done_t,
+                            turn_idx=turn_idx, arrival_t=arrival_t)
+            return
+        pkg = node.kv.export_slot(slot)
+        node.kv.release(slot)
+        st.used_slots -= 1
+        st.active_kv_tokens -= written
+        self._pump(node_id, self._now)
+        bind = self.sched.bind_decoder(view_of(conv), self.view)
+        self._offer(bind.node_id,
+                    Admission(conv.cid, pkg["length"],
+                              lambda nid, conv=conv, pkg=pkg,
+                              nt=int(next_tok), done_t=done_t,
+                              idx=turn_idx, at=arrival_t:
+                              self._transfer_bind(conv, nid, pkg, nt,
+                                                  max(done_t, self._now),
+                                                  turn_idx=idx,
+                                                  arrival_t=at)),
+                    done_t)
+
+    def _replace_admission(self, adm: Admission, now: float) -> Optional[int]:
+        """Re-place one admission drained off a dead node through the SAME
+        decision point that placed it (Runtime._drain_dead_node guards the
+        returned target)."""
+        conv = self._convs[adm.cid]
+        if adm.kind == "arrival":
+            return self.sched.place_first_prefill(view_of(conv),
+                                                  self.view).node_id
+        if adm.kind == "bind":
+            return self.sched.bind_decoder(view_of(conv), self.view).node_id
+        # a parked remote-turn package: the conversation is still bound
+        # (with live KV) elsewhere — re-plan the whole turn placement from
+        # scratch rather than re-offering a package that was never built
+        sess = self.sessions[adm.cid]
+        self._push(now, lambda idx=sess.turn_idx:
+                   self._next_turn(conv, idx, now))
+        return None
+
+    def _tool_watchdog(self, conv: Conversation, next_idx: int, gen: int,
+                       deadline_t: float):
+        """TOOL_WAIT deadline: the session entered TOOL_WAIT before turn
+        `next_idx` and its tool has not returned by `deadline_t`. "evict"
+        frees the slot for waiting work — the tool return re-admits through
+        journaled replay, exactly the dead-binding path; "fail" raises
+        loudly. A watchdog that fires after the tool returned (or after the
+        binding already died/recovered) is a no-op."""
+        cid = conv.cid
+        sess = self.sessions[cid]
+        if (gen != self._gen.get(cid, 0) or sess.state != TOOL_WAIT
+                or sess.turn_idx != next_idx or cid not in self._slots):
+            return
+        node_id, slot = self._slots[cid]
+        if not self.states[node_id].alive:
+            return  # binding already dead; the tool return replays anyway
+        if self.tool_timeout_action == "fail":
+            raise RuntimeError(
+                f"conversation {cid} exceeded the tool deadline: turn "
+                f"{next_idx} still TOOL_WAIT at t={deadline_t:.3f} "
+                f"(tool_deadline_s={self.tool_deadline_s}); "
+                f"tool_timeout_action='fail'")
+        node = self.replicas[node_id]
+        st = self.states[node_id]
+        st.active_kv_tokens -= int(node.kv.lengths[slot])
+        node.kv.release(slot)
+        st.used_slots -= 1
+        st.active_conversations -= 1
+        self._slots.pop(cid)
+        sess.node_id = None
+        self.records[cid].n_tool_evictions += 1
+        self.n_tool_evictions += 1
+        self.log.append(
+            f"t={deadline_t:.3f} tool deadline: evicted cid {cid} from "
+            f"replica {node_id} (turn {next_idx} still waiting); slot freed "
+            f"for parked work, tool return re-admits by replay")
+        # the freed slot turns around into waiting work immediately
+        self._pump(node_id, self._now)
+
+    def inject_transfer_faults(self, n: int = 1) -> "EngineServer":
+        """Arm `n` one-shot KV-transfer failures: each of the next `n`
+        `_transfer_bind` attempts dies before any KV lands and retries with
+        backoff on a freshly scheduler-chosen decoder (bounded by
+        `max_transfer_retries`, then loud)."""
+        self._transfer_fault_budget += int(n)
+        return self

@@ -1,0 +1,358 @@
+"""Failure contract on the REAL engine (EngineServer) plus cross-backend
+parity: journaled deterministic replay after replica death, lazy recovery
+from TOOL_WAIT, tool-deadline watchdogs, injectable KV-transfer faults with
+bounded retry, and loud no-healthy-target errors.
+
+The correctness bar is byte-identity: every recovered per-(cid, turn) token
+stream must equal the failure-free run's exactly — replica determinism plus
+the journal make recovery observation-only (no predicted/approximate state
+is ever reconstructed). Engine event times are real wall measurements, so
+failures are injected at STRUCTURAL points (a chosen conversation entering
+DECODING / TOOL_WAIT) rather than absolute times wherever a test needs a
+guaranteed victim; the hypothesis schedule property covers arbitrary
+(victim, time) combinations on top.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import make_scheduler
+from repro.core.conversation import Conversation, Turn
+from repro.core.metrics import summarize
+from repro.core.runtime import DECODING, TOOL_WAIT
+from repro.engine import EngineServer, ReplicaEngine
+from repro.models import build_model
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests fall back to a seeded schedule sweep
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# multi-turn conversations with real tool waits: failures can land mid-tail,
+# during TOOL_WAIT, and between turns
+def _trace(n=4):
+    return [Conversation(cid=i, arrival_s=i * 1e-6, turns=[
+        Turn(append_tokens=24 + 4 * i, output_tokens=10, tool_time_s=0.05),
+        Turn(append_tokens=10 + 2 * i, output_tokens=8, tool_time_s=0.0),
+    ]) for i in range(n)]
+
+
+def _disagg(cfg, params, **kw):
+    reps = [ReplicaEngine(cfg, params, n_slots=6, max_ctx=256,
+                          replica_id=0, role="prefill"),
+            ReplicaEngine(cfg, params, n_slots=3, max_ctx=256,
+                          replica_id=1, role="decode"),
+            ReplicaEngine(cfg, params, n_slots=3, max_ctx=256,
+                          replica_id=2, role="decode")]
+    return EngineServer(make_scheduler("conserve"), reps,
+                        record_tokens=True, strict_accounting=True, **kw)
+
+
+@pytest.fixture(scope="module")
+def baseline(qwen):
+    """Failure-free disaggregated run: the byte-identity reference."""
+    cfg, _, params = qwen
+    srv = _disagg(cfg, params)
+    recs = srv.serve(_trace())
+    assert len(recs) == 4 and not any(r.recovered for r in recs)
+    span = max(t.last_token_s for r in recs for t in r.turns)
+    return srv.sampled_tokens, span
+
+
+class _FailWhen(EngineServer):
+    """Kill the replica hosting `victim_cid` the moment that conversation
+    enters the chosen stage of `victim_turn` — a structural trigger that
+    does not depend on wall-clock event times."""
+
+    def __init__(self, *a, victim_cid=0, victim_turn=0, stage=DECODING,
+                 **kw):
+        super().__init__(*a, **kw)
+        self._victim = (victim_cid, victim_turn)
+        self._stage = stage
+        self._armed = True
+
+    def _maybe_fail(self, cid):
+        sess = self.sessions[cid]
+        if (self._armed and cid == self._victim[0]
+                and sess.state == self._stage and cid in self._slots):
+            self._armed = False
+            # fires BEFORE any completion event of the in-flight work (those
+            # land at measured wall offsets, far beyond 1ns)
+            self.fail_replica(self._slots[cid][0], self._now + 1e-9)
+
+    def _begin_decode(self, conv, turn_idx, next_tok, ready_t,
+                      arrival_t=None):
+        super()._begin_decode(conv, turn_idx, next_tok, ready_t,
+                              arrival_t=arrival_t)
+        if self._stage == DECODING and turn_idx == self._victim[1]:
+            self._maybe_fail(conv.cid)
+
+    def _finish_turn(self, task, t):
+        super()._finish_turn(task, t)
+        if self._stage == TOOL_WAIT and task.turn_idx + 1 == self._victim[1]:
+            self._maybe_fail(task.conv.cid)
+
+
+# --------------------------------------------------------------------------- #
+# decoder death with a guaranteed mid-turn victim
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("victim_turn", [0, 1])
+def test_decoder_death_mid_turn_replays_byte_identical(qwen, baseline,
+                                                       victim_turn):
+    cfg, _, params = qwen
+    tokens, _ = baseline
+    srv = _FailWhen(*_args(cfg, params), victim_cid=1,
+                    victim_turn=victim_turn, stage=DECODING,
+                    record_tokens=True, strict_accounting=True)
+    recs = srv.serve(_trace())
+    assert len(recs) == 4
+    assert srv.n_recoveries >= 1
+    assert srv.records[1].recovered
+    # the correctness bar: every stream byte-identical to the failure-free run
+    assert srv.sampled_tokens == tokens
+    # recovery latency closed (trigger -> interrupted decode runnable)
+    assert srv.records[1].recovery_latency_s
+    assert all(l > 0 for r in recs for l in r.recovery_latency_s)
+    # replay charged to the dedicated observable, never the victim's turns
+    assert sum(s.replayed_prefill_tokens
+               for s in srv.states.values() if s.alive) > 0
+    dead = next(s for s in srv.states.values() if not s.alive)
+    assert dead.active_kv_tokens == 0 and dead.used_slots == 0
+    srv.check_accounting()
+
+
+def _args(cfg, params):
+    reps = [ReplicaEngine(cfg, params, n_slots=6, max_ctx=256,
+                          replica_id=0, role="prefill"),
+            ReplicaEngine(cfg, params, n_slots=3, max_ctx=256,
+                          replica_id=1, role="decode"),
+            ReplicaEngine(cfg, params, n_slots=3, max_ctx=256,
+                          replica_id=2, role="decode")]
+    return make_scheduler("conserve"), reps
+
+
+def test_death_during_tool_wait_recovers_lazily(qwen, baseline):
+    """The replica dies while the victim is TOOL_WAITing on it: nothing to
+    replay until the tool returns — then the dead binding is observed and
+    the conversation re-admits by journaled replay."""
+    cfg, _, params = qwen
+    tokens, _ = baseline
+    srv = _FailWhen(*_args(cfg, params), victim_cid=2, victim_turn=1,
+                    stage=TOOL_WAIT, record_tokens=True,
+                    strict_accounting=True)
+    recs = srv.serve(_trace())
+    assert len(recs) == 4
+    assert srv.records[2].recovered
+    assert srv.sampled_tokens == tokens
+    assert srv.records[2].recovery_latency_s
+    srv.check_accounting()
+
+
+def test_failure_free_run_records_no_recovery(baseline, qwen):
+    cfg, _, params = qwen
+    srv = _disagg(cfg, params)
+    recs = srv.serve(_trace())
+    s = summarize(recs)
+    assert s["n_recovered"] == 0 and s["n_tool_evictions"] == 0
+    assert s["recovery_latency_mean_s"] == 0.0
+    assert all(st.replayed_prefill_tokens == 0 for st in srv.states.values())
+
+
+def test_recovery_summary_keys(qwen, baseline):
+    cfg, _, params = qwen
+    srv = _FailWhen(*_args(cfg, params), victim_cid=0, victim_turn=0,
+                    stage=DECODING, record_tokens=True)
+    recs = srv.serve(_trace())
+    s = summarize(recs)
+    assert s["n_recovered"] >= 1
+    assert s["recovery_latency_mean_s"] > 0
+    assert s["recovery_latency_p95_s"] >= s["recovery_latency_mean_s"] * 0.5
+
+
+# --------------------------------------------------------------------------- #
+# random seeded failure schedules: byte-identity is schedule-independent
+# --------------------------------------------------------------------------- #
+def _check_schedule(qwen, baseline, victim, frac):
+    """For ANY (victim decoder, failure time) drawn over the serving span,
+    every conversation completes and every per-(cid, turn) stream equals
+    the failure-free run's byte for byte."""
+    cfg, _, params = qwen
+    tokens, span = baseline
+    srv = _disagg(cfg, params)
+    srv.fail_replica(victim, frac * span)
+    recs = srv.serve(_trace())
+    assert len(recs) == 4
+    assert all(s.done for s in srv.sessions.values())
+    assert srv.sampled_tokens == tokens
+    srv.check_accounting()
+
+
+# always-on seeded sweep (no hypothesis dependency): fixed pseudo-random
+# (victim, time-fraction) schedules drawn once from a seeded RNG
+_RNG = np.random.RandomState(20260807)
+_SCHEDULES = [(int(_RNG.randint(1, 3)), float(_RNG.uniform(0.02, 0.98)))
+              for _ in range(4)]
+
+
+@pytest.mark.parametrize("victim,frac", _SCHEDULES,
+                         ids=[f"n{v}@{f:.2f}" for v, f in _SCHEDULES])
+def test_seeded_failure_schedule_is_byte_identical(qwen, baseline, victim,
+                                                   frac):
+    _check_schedule(qwen, baseline, victim, frac)
+
+
+if HAVE_HYPOTHESIS:
+    # real-engine property runs are slow: few examples, no deadline
+    ENGINE_SET = settings(max_examples=6, deadline=None,
+                          suppress_health_check=[HealthCheck.too_slow])
+
+    @ENGINE_SET
+    @given(victim=st.sampled_from([1, 2]), frac=st.floats(0.02, 0.98))
+    def test_any_failure_schedule_is_byte_identical(qwen, baseline, victim,
+                                                    frac):
+        _check_schedule(qwen, baseline, victim, frac)
+
+
+def test_mixed_node_death_with_parked_arrivals(qwen):
+    """Overloaded mixed pair: node 0 dies holding parked arrival admissions;
+    they re-place through place_first_prefill onto the survivor, and the
+    whole overloaded trace still completes byte-identically."""
+    cfg, _, params = qwen
+
+    def mixed_pair():
+        return [ReplicaEngine(cfg, params, n_slots=2, max_ctx=256,
+                              replica_id=i, role="mixed") for i in (0, 1)]
+
+    trace = _trace(6)  # 6 concurrent conversations vs 4 slots: some park
+    base = EngineServer(make_scheduler("conserve"), mixed_pair(),
+                        record_tokens=True, strict_accounting=True)
+    base_recs = base.serve(trace)
+    assert len(base_recs) == 6
+
+    srv = _FailWhen(make_scheduler("conserve"), mixed_pair(),
+                    victim_cid=0, victim_turn=0, stage=DECODING,
+                    record_tokens=True, strict_accounting=True)
+    recs = srv.serve(trace)
+    assert len(recs) == 6
+    assert srv.sampled_tokens == base.sampled_tokens
+    assert srv.n_recoveries >= 1
+    srv.check_accounting()
+
+
+# --------------------------------------------------------------------------- #
+# loud failure modes
+# --------------------------------------------------------------------------- #
+def test_no_healthy_decoder_raises(qwen):
+    cfg, _, params = qwen
+    reps = [ReplicaEngine(cfg, params, n_slots=4, max_ctx=256,
+                          replica_id=0, role="prefill"),
+            ReplicaEngine(cfg, params, n_slots=2, max_ctx=256,
+                          replica_id=1, role="decode")]
+    srv = EngineServer(make_scheduler("conserve"), reps)
+    srv.fail_replica(1, 0.0)  # the only decoder dies before any arrival
+    with pytest.raises(RuntimeError, match="no healthy decoder"):
+        srv.serve(_trace(2))
+
+
+def test_double_failure_of_same_replica_raises(qwen):
+    cfg, _, params = qwen
+    srv = _disagg(cfg, params)
+    srv.fail_replica(1, 0.0).fail_replica(1, 1e-6)
+    with pytest.raises(RuntimeError, match="failed twice"):
+        srv.serve(_trace(2))
+
+
+# --------------------------------------------------------------------------- #
+# tool-deadline watchdog
+# --------------------------------------------------------------------------- #
+def test_tool_watchdog_evicts_and_replays_byte_identical(qwen):
+    """One slot, two conversations: A's slow tool holds the slot until the
+    watchdog evicts it, B admits into the freed slot, A's tool return
+    re-admits by replay — both complete with unchanged streams."""
+    cfg, _, params = qwen
+    trace = [Conversation(cid=0, arrival_s=0.0, turns=[
+                 Turn(append_tokens=24, output_tokens=8, tool_time_s=5.0),
+                 Turn(append_tokens=10, output_tokens=6, tool_time_s=0.0)]),
+             Conversation(cid=1, arrival_s=1e-6, turns=[
+                 Turn(append_tokens=20, output_tokens=8, tool_time_s=0.0)])]
+
+    def one_slot(**kw):
+        rep = ReplicaEngine(cfg, params, n_slots=1, max_ctx=256,
+                            replica_id=0, role="mixed")
+        return EngineServer(make_scheduler("conserve"), [rep],
+                            record_tokens=True, strict_accounting=True, **kw)
+
+    base = one_slot()
+    base_recs = base.serve(trace)
+    assert len(base_recs) == 2
+
+    srv = one_slot(tool_deadline_s=0.5, tool_timeout_action="evict")
+    recs = srv.serve(trace)
+    assert len(recs) == 2
+    assert srv.n_tool_evictions == 1
+    assert srv.records[0].n_tool_evictions == 1
+    assert srv.records[0].recovered  # re-admitted by replay
+    assert srv.sampled_tokens == base.sampled_tokens
+    # B stopped waiting the moment the slot freed, long before A's tool came
+    # back at t=5: its queue wait is bounded by the deadline, not the tool
+    assert srv.sessions[1].queue_wait_s < 5.0
+    s = summarize(recs)
+    assert s["n_tool_evictions"] == 1 and s["n_recovered"] == 1
+    srv.check_accounting()
+
+
+def test_tool_watchdog_noop_when_tool_returns_in_time(qwen):
+    cfg, _, params = qwen
+    srv = _disagg(cfg, params, tool_deadline_s=30.0)  # far beyond any tool
+    recs = srv.serve(_trace())
+    assert len(recs) == 4
+    assert srv.n_tool_evictions == 0
+    assert not any(r.recovered for r in recs)
+
+
+def test_tool_watchdog_fail_action_raises(qwen):
+    cfg, _, params = qwen
+    trace = [Conversation(cid=0, arrival_s=0.0, turns=[
+        Turn(append_tokens=24, output_tokens=8, tool_time_s=5.0),
+        Turn(append_tokens=10, output_tokens=6, tool_time_s=0.0)])]
+    srv = _disagg(cfg, params, tool_deadline_s=0.5,
+                  tool_timeout_action="fail")
+    with pytest.raises(RuntimeError, match="exceeded the tool deadline"):
+        srv.serve(trace)
+
+
+# --------------------------------------------------------------------------- #
+# injectable KV-transfer faults with bounded retry
+# --------------------------------------------------------------------------- #
+def test_transfer_fault_retries_to_success(qwen, baseline):
+    cfg, _, params = qwen
+    tokens, _ = baseline
+    srv = _disagg(cfg, params)
+    srv.inject_transfer_faults(1)
+    recs = srv.serve(_trace())
+    assert len(recs) == 4
+    assert srv.n_transfer_retries == 1
+    assert srv.sampled_tokens == tokens  # faults never change content
+    assert any("KV transfer" in line and "FAILED" in line
+               for line in srv.log)
+    srv.check_accounting()
+
+
+def test_transfer_fault_budget_exhaustion_raises(qwen):
+    cfg, _, params = qwen
+    srv = _disagg(cfg, params, max_transfer_retries=2)
+    srv.inject_transfer_faults(10)  # every attempt of one binding faults
+    with pytest.raises(RuntimeError, match="consecutive attempts"):
+        srv.serve(_trace(2))

@@ -47,6 +47,27 @@ def test_summarize_keys_and_energy():
     assert s["ttfet_gmean"] == pytest.approx(4.0)
 
 
+def test_summarize_recovery_keys_always_present():
+    # failure-free: keys exist with zeros (stable benchmark schemas)
+    s = summarize([rec()])
+    assert s["n_recovered"] == 0 and s["n_tool_evictions"] == 0
+    assert s["recovery_latency_mean_s"] == 0.0
+    assert s["recovery_latency_p95_s"] == 0.0
+
+
+def test_summarize_recovery_view():
+    ok = rec()
+    hurt = rec()
+    hurt.recovered = True
+    hurt.recovery_latency_s = [0.5, 1.5]
+    hurt.n_tool_evictions = 1
+    s = summarize([ok, hurt])
+    assert s["n_recovered"] == 1
+    assert s["n_tool_evictions"] == 1
+    assert s["recovery_latency_mean_s"] == pytest.approx(1.0)
+    assert s["recovery_latency_p95_s"] == pytest.approx(1.45)
+
+
 def test_per_turn_distributions_sorted():
     d = per_turn_distributions([rec(), rec()])
     assert (np.diff(d["ttft"]) >= 0).all()

@@ -91,6 +91,55 @@ def test_requeue_from_parkable_stages_is_legal():
     assert s.queue_wait_s == pytest.approx(3.0)
 
 
+def test_forced_rewind_requeues_from_decoding():
+    """Failure recovery rewinds DECODING -> QUEUED (illegal normally: a
+    decoding conversation holds its slot) under force, and the session can
+    then re-run the whole admission/prefill/decode lifecycle."""
+    s = ServeSession(cid=10, arrival_s=0.0)
+    s.transition(PREFILLING, 1.0)
+    s.transition(DECODING, 2.0)
+    with pytest.raises(RuntimeError, match="illegal session transition"):
+        s.transition(QUEUED, 3.0)
+    s.transition(QUEUED, 3.0, force=True)
+    assert s.state == QUEUED
+    s.transition(PREFILLING, 4.0)
+    s.transition(DECODING, 5.0)
+    s.transition(DONE, 6.0)
+    # both lives are measurements: 1s arrival wait + 1s recovery requeue
+    assert s.queue_wait_s == pytest.approx(2.0)
+    assert s.time_in(DECODING) == pytest.approx(1.0 + 1.0)
+    assert s.time_in(PREFILLING) == pytest.approx(1.0 + 1.0)
+
+
+def test_forced_rewind_is_append_only_history():
+    """A rewind APPENDS to history — the pre-failure segments stay, so
+    time_in keeps counting work that really happened before the failure."""
+    s = ServeSession(cid=11, arrival_s=0.0)
+    s.transition(PREFILLING, 1.0)
+    s.transition(DECODING, 2.0)
+    n = len(s.history)
+    s.transition(QUEUED, 3.0, force=True)
+    assert len(s.history) == n + 1
+    assert s.history[-2] == (DECODING, 2.0)  # pre-failure segment intact
+
+
+def test_forced_rewind_clamps_timestamps_monotone():
+    """A failure can interleave with a completion stamped at a logically
+    LATER time (e.g. a staged decode whose transition carries its future
+    prefill-completion time). The rewind stamp clamps to the history tail
+    so every dwell stays a non-negative measurement."""
+    s = ServeSession(cid=12, arrival_s=0.0)
+    s.transition(PREFILLING, 1.0)
+    s.transition(DECODING, 5.0)        # stamped at a future logical time
+    s.transition(QUEUED, 4.0, force=True)  # failure observed at t=4 < 5
+    assert s.history[-1] == (QUEUED, 5.0)  # clamped, not rewound in time
+    assert all(t1 >= t0 for (_, t0), (_, t1)
+               in zip(s.history, s.history[1:]))
+    s.transition(PREFILLING, 4.5)      # later stamps keep clamping forward
+    assert s.history[-1][1] == 5.0
+    assert s.queue_wait_s == pytest.approx(1.0)  # only the arrival wait
+
+
 # --------------------------------------------------------------------------- #
 # SlotKVCache misuse stays loud (and diagnostic)
 # --------------------------------------------------------------------------- #

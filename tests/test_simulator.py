@@ -85,6 +85,63 @@ class TestFaultTolerance:
             if n.alive:
                 assert n.state.active_kv_tokens == 0
 
+    def test_decoder_failure_records_recovery_observables(self):
+        trace = generate_trace(20, 1.0, TraceConfig(seed=7, mean_turns=6.0))
+        sim = paper_deployment("conserve")
+        sim.submit(trace)
+        sim.inject_failure(node_id=1, at_s=20.0)
+        sim.run()
+        recs = sim.results()
+        s = summarize(recs)
+        assert s["n_recovered"] == sum(r.recovered for r in recs) > 0
+        # trigger -> resumed decode latency closed for every recovery
+        assert all(r.recovery_latency_s for r in recs if r.recovered)
+        assert s["recovery_latency_mean_s"] > 0
+        # replay compute charged to the prefiller's dedicated observable
+        assert sim.nodes[0].state.replayed_prefill_tokens > 0
+
+    def test_two_decoder_failures_replace_around_both_corpses(self):
+        """Regression for the re-placement blind spot: with TWO dead
+        decoders, drained/parked work and victim re-binds must route around
+        both (the old code could silently re-offer onto a dead node, where
+        nothing ever pumps). Loud guards now back the invariant."""
+        trace = generate_trace(30, 1.2,
+                               TraceConfig(seed=21, mean_turns=5.0,
+                                           tool_mean_s=4.0))
+        sim = paper_deployment("conserve")
+        sim.submit(trace)
+        sim.inject_failure(node_id=1, at_s=15.0)
+        sim.inject_failure(node_id=2, at_s=30.0)
+        sim.run()
+        recs = sim.results()
+        assert len(recs) == 30  # nothing stranded on either corpse
+        assert sum(r.recovered for r in recs) > 0
+        assert sum("FAILED" in line for line in sim.log) == 2
+        # every surviving binding ended on the one healthy decoder
+        for nid in (1, 2):
+            assert sim.nodes[nid].state.active_conversations == 0
+        assert sim.nodes[3].alive
+
+    def test_same_node_double_failure_raises(self):
+        trace = generate_trace(5, 1.0, TraceConfig(seed=7))
+        sim = paper_deployment("conserve")
+        sim.submit(trace)
+        sim.inject_failure(node_id=1, at_s=10.0)
+        sim.inject_failure(node_id=1, at_s=12.0)
+        with pytest.raises(RuntimeError, match="failed twice"):
+            sim.run()
+
+    def test_no_healthy_decoder_left_raises(self):
+        """Killing the ONLY decoder must fail loudly at re-placement time,
+        not park recovery work on the corpse."""
+        trace = generate_trace(10, 1.0, TraceConfig(seed=7, mean_turns=4.0))
+        sim = build_cluster(make_scheduler("conserve"), n_prefill=1,
+                            n_decode=1)
+        sim.submit(trace)
+        sim.inject_failure(node_id=1, at_s=8.0)
+        with pytest.raises(RuntimeError, match="no healthy decoder"):
+            sim.run()
+
     def test_straggler_screening_shifts_bindings(self):
         trace = generate_trace(40, 1.2, TraceConfig(seed=9))
         sched = make_scheduler("conserve", straggler_factor=2.0)
@@ -96,6 +153,52 @@ class TestFaultTolerance:
         assert counts.get(1, 0) < counts.get(2, 0)
         assert counts.get(1, 0) < counts.get(3, 0)
         assert len(sim.results()) == 40  # nothing lost
+
+
+class TestToolWatchdog:
+    def test_deadline_evicts_and_tool_return_replays(self):
+        """Same watchdog contract as the engine: a tool overrunning the
+        deadline loses its KV (freed for parked work); the eventual tool
+        return re-admits through deterministic replay."""
+        trace = generate_trace(20, 1.5,
+                               TraceConfig(seed=31, mean_turns=4.0,
+                                           tool_mean_s=10.0))
+        sim = paper_deployment("conserve", tool_deadline_s=2.0,
+                               tool_timeout_action="evict")
+        sim.submit(trace).run()
+        recs = sim.results()
+        assert len(recs) == 20
+        assert sim.n_tool_evictions > 0
+        s = summarize(recs)
+        assert s["n_tool_evictions"] == sim.n_tool_evictions
+        # evicted conversations came back by replay and completed
+        evicted = [r for r in recs if r.n_tool_evictions]
+        assert evicted and all(r.recovered for r in evicted)
+        assert all(r.recovery_latency_s for r in evicted)
+        # replay charged to the prefiller
+        assert sim.nodes[0].state.replayed_prefill_tokens > 0
+        # healthy end state: nothing left resident anywhere
+        for n in sim.nodes.values():
+            assert n.state.active_kv_tokens == 0
+            assert n.state.active_conversations == 0
+
+    def test_deadline_off_by_default(self):
+        trace = generate_trace(10, 1.0,
+                               TraceConfig(seed=31, tool_mean_s=10.0))
+        sim = paper_deployment("conserve")
+        sim.submit(trace).run()
+        assert sim.n_tool_evictions == 0
+        assert not any(r.recovered for r in sim.results())
+
+    def test_fail_action_raises(self):
+        trace = generate_trace(5, 1.0,
+                               TraceConfig(seed=31, mean_turns=4.0,
+                                           tool_mean_s=10.0))
+        sim = paper_deployment("conserve", tool_deadline_s=2.0,
+                               tool_timeout_action="fail")
+        sim.submit(trace)
+        with pytest.raises(RuntimeError, match="exceeded the tool deadline"):
+            sim.run()
 
 
 class TestElasticity:
