@@ -386,8 +386,20 @@ def fault_recovery_bench():
     fault_recovery.main(quick=True)
 
 
+def prefix_reuse_bench():
+    """Shared-prefix KV pool: turn-1 tokens/s for a fleet sharing one
+    preamble, pooled vs no-pool, with byte-identity of the sampled streams
+    asserted inside the run (writes BENCH_prefix_reuse.json at the repo
+    root). Series: `prefix_reuse_turn1` (engine: pooled vs no-pool context
+    tokens/s + pool hits) and `prefix_reuse_sim` (simulator mirror: pool
+    hits / entries under identity keys and the cost-model cached_prefix)."""
+    from . import prefix_reuse
+    prefix_reuse.main(quick=True)
+
+
 ALL = [fig01_trace_dist, fig02_prefill_curve, fig03_kv_transfer,
        fig04_tbt_heatmap, fig05_collocation, fig06_tbt_variance,
        fig07_powercap_prefill, fig08_powercap_decode, fig10_agentic_perf,
        fig11_cdfs, fig12_wrong_prediction, fig13_hetero, decode_tail_bench,
-       prefill_path_bench, serve_overload_bench, fault_recovery_bench]
+       prefill_path_bench, serve_overload_bench, fault_recovery_bench,
+       prefix_reuse_bench]

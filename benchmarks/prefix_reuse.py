@@ -1,0 +1,186 @@
+"""Shared-prefix KV pool benchmark: turn-1 prefill throughput when many
+conversations open with the same preamble (system prompt / tool schemas).
+
+A fleet of conversations shares ONE preamble; each adds a distinct task
+delta. Two jit engines run the identical turn-1 schedule:
+
+  * `no_pool`:  every conversation prefills its full context from scratch
+    (the split at the preamble boundary still happens — the split, not the
+    pool, fixes the math — but the preamble forward is recomputed);
+  * `pooled`:   the first conversation populates the node-level prefix KV
+    pool; every later conversation folds the pooled rows in one donated
+    dispatch and forwards only its delta.
+
+The measured quantity is turn-1 CONTEXT tokens/s: total context tokens
+landed in slots divided by wall prefill time, so the pooled win is exactly
+the recomputation it skipped. Sampled turn-1 tokens must be byte-identical
+across the two engines (pool on/off never changes the stream), and the
+gate `pooled_tok_s >= no_pool_tok_s` at >= 8 conversations sharing one
+preamble is what CI enforces.
+
+A ClusterSimulator section mirrors the same fleet through the sim pool
+(identity keys, cost model cached_prefix) and reports hits + delta-charged
+admission tokens, so both backends' pool accounting lands in the same
+trajectory file.
+
+Emits CSV rows through benchmarks.common and writes BENCH_prefix_reuse.json
+at the repo root (quick runs write BENCH_prefix_reuse_quick.json).
+
+Usage: PYTHONPATH=src python -m benchmarks.prefix_reuse [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .common import emit
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_prefix_reuse.json"
+BENCH_QUICK_PATH = BENCH_PATH.with_name("BENCH_prefix_reuse_quick.json")
+
+
+def _engine(cfg, params, pool_tokens: int, max_ctx: int):
+    from repro.engine import ReplicaEngine
+    return ReplicaEngine(cfg, params, n_slots=4, max_ctx=max_ctx,
+                         prefill_mode="jit", prefix_pool_tokens=pool_tokens)
+
+
+def _fleet(n_convs: int, preamble_len: int, delta_len: int, vocab: int):
+    """One shared preamble + per-conversation deltas, deterministic."""
+    rng = np.random.RandomState(7)
+    pre = rng.randint(0, vocab, size=preamble_len).astype(np.int32)
+    deltas = [rng.randint(0, vocab, size=delta_len).astype(np.int32)
+              for _ in range(n_convs)]
+    return pre, deltas
+
+
+def _run_fleet(eng, pre, deltas):
+    """Every conversation's turn-1 prefill with the preamble split, slot
+    released immediately (the fleet is larger than n_slots — pool reuse,
+    not slot reuse, is what's under test). Returns (context_tokens,
+    wall_s, [sampled token per conversation])."""
+    toks, total, total_s = [], 0, 0.0
+    for delta in deltas:
+        slot = eng.kv.acquire()
+        full = np.concatenate([pre, delta])
+        tok, dt = eng.prefill_conversation(slot, full, prefix_len=len(pre))
+        toks.append(int(tok))
+        total += len(full)
+        total_s += dt
+        eng.kv.release(slot)
+    return total, total_s, toks
+
+
+def _measure(eng, pre, deltas, repeats: int):
+    """Warm pass (compiles every bucket + populates/exercises the pool),
+    then best-of-N measured passes. The pool survives across passes — the
+    steady state being measured IS the warm-pool state; the cold populate
+    cost is charged once in the warm-up like compile time."""
+    _run_fleet(eng, pre, deltas)
+    best = None
+    for _ in range(max(1, repeats)):
+        r = _run_fleet(eng, pre, deltas)
+        if best is None or r[1] < best[1]:
+            best = r
+    return best
+
+
+def _sim_fleet(n_convs: int, preamble_len: int, delta_len: int):
+    """Mirror fleet through ClusterSimulator: one prefiller + one pooled
+    prefiller, conversations arriving with a shared preamble identity.
+    Returns the pool/accounting observables."""
+    from repro.cluster import A40, NodeCostModel, ServedModelProfile
+    from repro.cluster.simulator import ClusterSimulator, SimNode
+    from repro.core import make_scheduler
+    from repro.core.conversation import Conversation, Turn
+
+    cost = NodeCostModel(A40, ServedModelProfile())
+    nodes = [SimNode(node_id=0, role="prefill", cost=cost,
+                     prefix_pool_tokens=4 * preamble_len),
+             SimNode(node_id=1, role="decode", cost=cost)]
+    convs = [Conversation(
+        cid=i, arrival_s=0.05 * i,
+        turns=[Turn(append_tokens=preamble_len + delta_len,
+                    output_tokens=8, tool_time_s=0.0)],
+        preamble_id=0, preamble_tokens=preamble_len)
+        for i in range(n_convs)]
+    sim = ClusterSimulator(make_scheduler("conserve"), nodes)
+    sim.serve(convs)
+    pf = sim.nodes[0].state
+    done = sum(1 for s in sim.sessions.values() if s.done)
+    return {"completed": done,
+            "pool_hits": pf.pooled_prefix_hits,
+            "pool_entries": pf.pooled_prefix_entries,
+            "pooled_tokens": pf.pooled_prefix_tokens}
+
+
+def main(quick: bool = False):
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import build_model
+
+    n_convs = 8 if quick else 16
+    preamble_len, delta_len = (96, 40) if quick else (192, 64)
+    repeats = 3 if quick else 5
+    max_ctx = 256 if quick else 512
+
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pre, deltas = _fleet(n_convs, preamble_len, delta_len, cfg.vocab_size)
+
+    out = {}
+    for name, pool_tokens in (("pooled", 4 * preamble_len), ("no_pool", 0)):
+        eng = _engine(cfg, params, pool_tokens, max_ctx)
+        tokens, wall_s, toks = _measure(eng, pre, deltas, repeats)
+        out[name] = {
+            "context_tokens": tokens, "wall_s": wall_s,
+            "tok_s": tokens / wall_s,
+            "sampled": toks,
+            "pool_hits": (eng.prefix_pool.total_hits
+                          if eng.prefix_pool else 0),
+            "pooled_prefix_tokens": int(eng.n_pooled_prefix_tokens),
+            "compile_s": round(eng.compile_s, 3),
+        }
+
+    if out["pooled"]["sampled"] != out["no_pool"]["sampled"]:
+        raise AssertionError(
+            "pool on/off changed the sampled turn-1 stream: "
+            f"{out['pooled']['sampled']} vs {out['no_pool']['sampled']}")
+
+    speedup = out["pooled"]["tok_s"] / out["no_pool"]["tok_s"]
+    emit("prefix_reuse_turn1",
+         out["no_pool"]["wall_s"] / n_convs * 1e6,
+         f"pooled={out['pooled']['tok_s']:.0f}tok/s;"
+         f"no_pool={out['no_pool']['tok_s']:.0f}tok/s;"
+         f"speedup={speedup:.2f}x;hits={out['pooled']['pool_hits']}")
+
+    sim = _sim_fleet(n_convs, preamble_len, delta_len)
+    emit("prefix_reuse_sim", sim["pool_hits"],
+         f"completed={sim['completed']}/{n_convs};"
+         f"hits={sim['pool_hits']};entries={sim['pool_entries']}")
+
+    payload = {"model": "qwen3-0.6b(reduced)",
+               "backend": jax.default_backend(), "quick": quick,
+               "n_conversations": n_convs,
+               "preamble_tokens": preamble_len, "delta_tokens": delta_len,
+               "repeats": repeats,
+               "pooled": {k: v for k, v in out["pooled"].items()
+                          if k != "sampled"},
+               "no_pool": {k: v for k, v in out["no_pool"].items()
+                           if k != "sampled"},
+               "stream_identical": True,
+               "speedup": round(speedup, 3),
+               "sim": sim}
+    (BENCH_QUICK_PATH if quick else BENCH_PATH).write_text(
+        json.dumps(payload, indent=1))
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

@@ -38,8 +38,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.core.conversation import Conversation, TurnView, view_of
 from repro.core.metrics import ConversationRecord, TurnRecord
 from repro.core.runtime import (Admission, AdmissionQueue, DECODING, DONE,
-                                PREFILLING, Runtime, ServeSession, TOOL_WAIT,
-                                TRANSFERRING)
+                                PREFILLING, PrefixKVPool, Runtime,
+                                ServeSession, TOOL_WAIT, TRANSFERRING)
 from repro.core.scheduler import Scheduler
 from repro.core.signals import ClusterView, NodeState
 
@@ -65,6 +65,11 @@ class PrefillJob:
     extra_busy_s: float = 0.0  # KV I/O the node stalls on (remote turns: the
     #                            inbound history read + outbound write-back,
     #                            §5.5's "memory-heavy work on the prefiller")
+    warm_prefix: bool = False  # turn-1 prefix served from the node's prefix
+    #                            KV pool (observed hit at admission): only
+    #                            n_tokens past the pooled preamble are
+    #                            compute; the cost model's cached_prefix
+    #                            (context - n_tokens) covers the rest
 
 
 @dataclasses.dataclass
@@ -85,6 +90,13 @@ class SimNode:
     role: str                          # "prefill" | "decode" | "mixed"
     cost: NodeCostModel
     n_slots: Optional[int] = None      # finite KV slot count (None=unbounded)
+    # token budget for the node-level prefix KV pool (0 = no pool), SEPARATE
+    # from kv_capacity — same contract as ReplicaEngine.prefix_pool_tokens.
+    # The simulator's pool stores no rows (caches=None), only the observed
+    # token volume + reuse counters, keyed by preamble identity; it ages
+    # under the same shared eviction rule as the engine's.
+    prefix_pool_tokens: int = 0
+    prefix_pool: Optional[PrefixKVPool] = None
     state: NodeState = None
     prefill_q: List[PrefillJob] = dataclasses.field(default_factory=list)
     decode_jobs: Dict[int, DecodeJob] = dataclasses.field(default_factory=dict)
@@ -127,6 +139,8 @@ class ClusterSimulator(Runtime):
             n.state = NodeState(node_id=n.node_id, role=n.role,
                                 kv_capacity_tokens=cap,
                                 slot_capacity=n.n_slots or UNBOUNDED_SLOTS)
+            if n.prefix_pool_tokens > 0 and n.prefix_pool is None:
+                n.prefix_pool = PrefixKVPool(n.prefix_pool_tokens)
         self.chunk_tokens = chunk_tokens
         self.decoder_chunk_tokens = decoder_chunk_tokens
         self.track_token_times = track_token_times
@@ -225,17 +239,71 @@ class ClusterSimulator(Runtime):
         # long-term KV residency; backpressure applies at the decoder bind
         self._admit_arrival(conv, pl.node_id)
 
+    # ----- prefix KV pool (simulator mirror) -----------------------------------
+    def _pool_key(self, conv: Conversation):
+        """The simulator's pool key is the preamble IDENTITY — it has no
+        token bytes to content-hash (the engine keys on `prefix_hash` of the
+        actual tokens; the trace generator guarantees the two coincide:
+        same (preamble_id, length) => byte-identical prefix)."""
+        if conv.preamble_id is None or conv.preamble_tokens <= 0:
+            return None
+        return (conv.preamble_id, conv.preamble_tokens)
+
+    def _pool_prefix_hit(self, node: SimNode, conv: Conversation) -> int:
+        """OBSERVED pool hit at admission time: the pooled preamble length
+        this turn-1 prefill job skips (0 = miss / no pool / no preamble).
+        A hit records on the entry's reuse counters — it feeds the job."""
+        key = self._pool_key(conv)
+        if key is None or node.prefix_pool is None:
+            return 0
+        if node.prefix_pool.get(key) is None:  # get() records the hit
+            return 0
+        self._sync_pool_state(node)
+        return conv.preamble_tokens
+
+    def _pool_populate(self, node: SimNode, conv: Conversation):
+        """Miss-path completion: install the preamble's token volume under
+        the shared eviction rule (no-op if another conversation populated
+        it first, or the node died while the job was in flight)."""
+        key = self._pool_key(conv)
+        if key is None or node.prefix_pool is None or not node.alive:
+            return
+        node.prefix_pool.put(key, None, conv.preamble_tokens,
+                             conv.preamble_tokens)
+        self._sync_pool_state(node)
+
+    def _sync_pool_state(self, node: SimNode):
+        """Mirror the node's prefix-pool ground truth into the NodeState
+        observables (same mirror contract as the engine backend)."""
+        pool = node.prefix_pool
+        if pool is None:
+            return
+        st = node.state
+        st.pooled_prefix_tokens = pool.pooled_tokens
+        st.pooled_prefix_entries = pool.n_entries
+        st.pooled_prefix_hits = pool.total_hits
+        st.pooled_prefix_evictions = pool.n_evictions
+
     def _admit_arrival(self, conv: Conversation, node_id: int):
         node = self.nodes[node_id]
         mixed = node.node_id if node.role == "mixed" else None
         if mixed is not None:
+            # the slot lands the FULL context either way (pooled rows fold
+            # in); only the prefill COMPUTE charge below shrinks on a hit
             self._reserve(node.state, conv.first_input_len)
         self.sessions[conv.cid].transition(PREFILLING, self.now)
+        pooled = self._pool_prefix_hit(node, conv)
+
+        def on_done(t, conv=conv, node=node, mixed=mixed, pooled=pooled):
+            if not pooled:
+                self._pool_populate(node, conv)
+            self._after_first_prefill(conv, t, mixed_node=mixed)
+
         job = PrefillJob(
-            cid=conv.cid, turn_idx=0, n_tokens=conv.first_input_len,
+            cid=conv.cid, turn_idx=0,
+            n_tokens=conv.first_input_len - pooled,
             context_tokens=conv.first_input_len, enqueued_s=self.now,
-            on_done=lambda t, conv=conv: self._after_first_prefill(
-                conv, t, mixed_node=mixed))
+            on_done=on_done, warm_prefix=pooled > 0)
         self._enqueue_prefill(node, job)
 
     def _enqueue_prefill(self, node: SimNode, job: PrefillJob):
@@ -245,7 +313,8 @@ class ClusterSimulator(Runtime):
             dj = DecodeJob(cid=job.cid, turn_idx=job.turn_idx,
                            remaining_prefill=job.n_tokens, remaining_decode=0,
                            context_tokens=job.context_tokens,
-                           turn_arrival_s=job.enqueued_s, cold_prefix=True)
+                           turn_arrival_s=job.enqueued_s,
+                           cold_prefix=not job.warm_prefix)
             dj._prefill_done = job.on_done  # type: ignore[attr-defined]
             node.decode_jobs[(job.cid << 8) + job.turn_idx] = dj
             self._kick_iteration(node)
@@ -560,10 +629,16 @@ class ClusterSimulator(Runtime):
                 node.state.queued_prefill_tokens = max(
                     0, node.state.queued_prefill_tokens - dj.remaining_prefill)
         node.decode_jobs.clear()
+        if node.prefix_pool is not None:
+            # pooled preamble rows die with the node's KV: recovered and
+            # future conversations re-populate through the normal miss path
+            # (the cumulative hit/eviction counters survive)
+            node.prefix_pool.invalidate_all()
         node.state.active_kv_tokens = 0
         node.state.active_conversations = 0
         node.state.used_slots = 0
         node.state.reserved_kv_tokens = 0
+        self._sync_pool_state(node)
         self.log.append(f"t={self.now:.1f} node {node_id} FAILED; "
                         f"recovering {len(victims)} in-flight conversations "
                         f"by replay (tool-waiting ones recover lazily)")

@@ -28,6 +28,24 @@ class Conversation:
     cid: int
     arrival_s: float
     turns: List[Turn]
+    # Shared-preamble identity (agentic fleets: many conversations open with
+    # the same system-prompt / tool-schema prefix). `preamble_tokens` is the
+    # length of that shared prefix INSIDE turn 0's append_tokens; two
+    # conversations with the same (preamble_id, preamble_tokens) have
+    # byte-identical first `preamble_tokens` input tokens. None/0 = no shared
+    # prefix. The preamble is part of the context either way — it only tells
+    # the runtime where turn 1 may split against a prefix KV pool.
+    preamble_id: Optional[int] = None
+    preamble_tokens: int = 0
+
+    def __post_init__(self):
+        if self.preamble_tokens and not (
+                0 < self.preamble_tokens < self.turns[0].append_tokens):
+            raise ValueError(
+                f"conversation {self.cid}: preamble_tokens "
+                f"({self.preamble_tokens}) must leave a non-empty turn-1 "
+                f"delta inside first_input_len "
+                f"({self.turns[0].append_tokens})")
 
     @property
     def n_turns(self) -> int:
@@ -59,10 +77,14 @@ class Conversation:
 @dataclasses.dataclass(frozen=True)
 class ConversationView:
     """What a scheduler is allowed to see when it must act: identity, arrival
-    time, and the *first-turn input length* — nothing decode-side."""
+    time, and the *first-turn input length* — nothing decode-side. The
+    preamble identity is observable at arrival (the prompt bytes are in
+    hand), so prefix-affinity placement stays within the observation rule."""
     cid: int
     arrival_s: float
     first_input_len: int
+    preamble_id: Optional[int] = None
+    preamble_tokens: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,4 +98,5 @@ class TurnView:
 
 
 def view_of(conv: Conversation) -> ConversationView:
-    return ConversationView(conv.cid, conv.arrival_s, conv.first_input_len)
+    return ConversationView(conv.cid, conv.arrival_s, conv.first_input_len,
+                            conv.preamble_id, conv.preamble_tokens)

@@ -156,6 +156,19 @@ class Admission:
     # once toward n_deferred_admissions even if a reoffer policy later
     # moves it to another node that also parks it
     deferred: bool = False
+    # prefill-COMPUTE tokens this work will actually run (the backlog charge
+    # feeding `queued_prefill_tokens`). None = need_tokens. They differ when
+    # a shared prefix is already resident in the target node's prefix KV
+    # pool: the slot still lands with the FULL context (need_tokens — the
+    # headroom/fit ask is unchanged), but only the delta past the pooled
+    # prefix is computed. Set from an OBSERVED pool hit at offer time, never
+    # from a prediction of what the pool might hold later.
+    charge_tokens: Optional[int] = None
+
+    @property
+    def charge(self) -> int:
+        return (self.need_tokens if self.charge_tokens is None
+                else self.charge_tokens)
 
 
 class AdmissionQueue:
@@ -249,6 +262,142 @@ class ConversationJournal:
     def drop(self, cid: int):
         for key in [k for k in self._streams if k[0] == cid]:
             del self._streams[key]
+
+
+# ----- prefix KV pool: the one shared eviction rule --------------------------
+def prefix_eviction_order(entries: Dict[Any, Any]) -> List[Any]:
+    """Eviction order for a node's prefix KV pool, shared by BOTH backends so
+    the pools age identically under one contract.
+
+    The rule is observation-only (Astraea's argument, PAPERS.md): evict the
+    entry with the FEWEST observed reuse hits first, ties broken
+    least-recently-hit (LRU over measured hits, `last_use` is a monotone use
+    sequence number) — never a predicted popularity. Entries with live
+    references (`refs > 0`: a prefill is reading the rows right now) are
+    pinned and excluded entirely; callers must REFUSE to make room rather
+    than evict pinned rows out from under an in-flight program.
+
+    `entries` maps pool key -> entry with observable counters `hits`,
+    `last_use`, `refs`. Returns the evictable keys, first-to-evict first.
+    """
+    evictable = [(e.hits, e.last_use, k) for k, e in entries.items()
+                 if e.refs == 0]
+    evictable.sort(key=lambda t: (t[0], t[1]))
+    return [k for _, _, k in evictable]
+
+
+@dataclasses.dataclass
+class PrefixPoolEntry:
+    """One immutable pooled prefix. In the engine, `caches` holds the device
+    rows shaped exactly like `slice_slot_prefix`'s output ((…, 1, ctx, …)
+    growing leaves, (…, 1, …) fixed states), zero-masked beyond `length` so
+    the padded tail carries no slot-specific stale bytes; the simulator
+    models only the token volume and stores None. `hits`/`last_use` are the
+    OBSERVED reuse counters the eviction rule orders on; `refs` pins the
+    entry while a prefill is reading it."""
+    key: Any
+    caches: Any
+    length: int           # live prefix tokens
+    ctx: int              # padded ctx bucket the rows were exported at
+    hits: int = 0
+    last_use: int = 0
+    refs: int = 0
+
+
+class PrefixKVPool:
+    """Node-level pool of immutable shared-prefix KV rows — ONE container
+    for both backends (the engine keys by token-content hash and stores
+    device rows; the simulator keys by preamble identity and stores token
+    volume only), so the pools age identically under the shared eviction
+    rule.
+
+    A third cache ownership class: rows owned by NO slot — populated the
+    first time a preamble is prefilled, read (never written) by any number
+    of later turn-1 prefills on the same node. Capacity is a budget in
+    live prefix tokens, SEPARATE from the slot cache's kv_capacity, so
+    `kv_headroom_tokens` keeps meaning slot-landable work. Eviction is the
+    shared `prefix_eviction_order` rule (fewest observed hits, ties
+    least-recently-hit, pinned entries untouchable): when evicting every
+    unpinned entry still cannot make room, `put` REFUSES (returns False)
+    rather than evict pinned rows out from under a reader."""
+
+    def __init__(self, capacity_tokens: int):
+        self.capacity_tokens = int(capacity_tokens)
+        self.entries: Dict[Any, PrefixPoolEntry] = {}
+        self._seq = 0  # monotone use counter (LRU tie-break clock)
+        self.total_hits = 0
+        self.n_evictions = 0
+
+    # ----- observables -------------------------------------------------------
+    @property
+    def pooled_tokens(self) -> int:
+        return sum(e.length for e in self.entries.values())
+
+    @property
+    def n_entries(self) -> int:
+        return len(self.entries)
+
+    # ----- reads -------------------------------------------------------------
+    def contains(self, key) -> bool:
+        return key in self.entries
+
+    def get(self, key) -> Optional[PrefixPoolEntry]:
+        """Look up pooled rows and RECORD the reuse: hits and last_use are
+        the observed counters eviction orders on, so a lookup that feeds a
+        prefill must come through here (use `contains` for side-effect-free
+        checks)."""
+        e = self.entries.get(key)
+        if e is None:
+            return None
+        self._seq += 1
+        e.hits += 1
+        e.last_use = self._seq
+        self.total_hits += 1
+        return e
+
+    # ----- pinning -----------------------------------------------------------
+    def pin(self, key):
+        self.entries[key].refs += 1
+
+    def unpin(self, key):
+        e = self.entries[key]
+        if e.refs <= 0:
+            raise RuntimeError(
+                f"prefix pool entry {key} unpinned more times than pinned")
+        e.refs -= 1
+
+    # ----- writes ------------------------------------------------------------
+    def put(self, key, caches, length: int, ctx: int) -> bool:
+        """Install pooled rows for `key`, evicting by the shared observed-
+        reuse rule until the token budget fits. Returns False (and pools
+        nothing) when the entry can never fit or only pinned entries could
+        make room. Re-putting an existing key is a no-op (the rows are
+        immutable — first write wins)."""
+        if key in self.entries:
+            return True
+        if length > self.capacity_tokens:
+            return False
+        while self.pooled_tokens + length > self.capacity_tokens:
+            order = prefix_eviction_order(self.entries)
+            if not order:
+                return False  # everything left is pinned — refuse, don't rip
+            victim = self.entries.pop(order[0])
+            self.n_evictions += 1
+            del victim
+        self._seq += 1
+        self.entries[key] = PrefixPoolEntry(
+            key=key, caches=caches, length=int(length), ctx=int(ctx),
+            last_use=self._seq)
+        return True
+
+    def invalidate_all(self):
+        """Node failure: pooled rows die with the node's slot cache (same
+        `invalidate_all` moment). Entries are dropped so a recovered
+        conversation re-populates through the normal miss path instead of
+        dangling a reference to dead device buffers; cumulative counters
+        (hits/evictions) survive — they count events that already
+        happened."""
+        self.entries.clear()
 
 
 class Runtime(abc.ABC):

@@ -121,6 +121,21 @@ class Scheduler(abc.ABC):
         return min(ds, key=lambda n: (n.active_kv_tokens,
                                       n.active_conversations)).node_id
 
+    @staticmethod
+    def prefix_pool_pressure(view: ClusterView, node_id: int) -> float:
+        """Observed churn of a node's prefix KV pool: evictions per recorded
+        hit (0.0 for an idle or perfectly-retaining pool). Built purely from
+        the `pooled_prefix_*` counters the runtime maintains — a policy may
+        use it to prefer nodes whose pools are NOT thrashing when placing
+        turn-1 prefills of shared-preamble conversations (the ConversationView
+        carries `preamble_id`, observable at arrival). No prediction of
+        future reuse is involved: both inputs count events that already
+        happened."""
+        n = view.node(node_id)
+        if n.pooled_prefix_hits <= 0:
+            return float(n.pooled_prefix_evictions)
+        return n.pooled_prefix_evictions / n.pooled_prefix_hits
+
 
 SCHEDULERS: Dict[str, type] = {}
 

@@ -85,6 +85,17 @@ class NodeState:
     # eviction — replay work is charged here, never to the victim
     # conversation's TTFET history (Maestro-style honest recovery cost)
     replayed_prefill_tokens: int = 0
+    # prefix-KV-pool observables: immutable shared-prefix rows this node
+    # holds outside any slot. Counters of pool state/events the runtime
+    # already owns (tokens resident, entries, observed reuse hits, evictions)
+    # — observations a scheduler may condition prefix-affinity placement on,
+    # never predictions of future reuse. Pool capacity is a SEPARATE budget
+    # from kv_capacity_tokens: pooled rows never eat slot headroom, so
+    # kv_headroom_tokens stays truthful about slot-landable work.
+    pooled_prefix_tokens: int = 0
+    pooled_prefix_entries: int = 0
+    pooled_prefix_hits: int = 0
+    pooled_prefix_evictions: int = 0
 
     @property
     def kv_utilization(self) -> float:

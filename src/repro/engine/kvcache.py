@@ -9,13 +9,16 @@ host-side, and reads beyond a slot's live length are masked via kv_lens.
 """
 from __future__ import annotations
 
+import hashlib
 from functools import partial
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.runtime import (PrefixKVPool, PrefixPoolEntry,  # noqa: F401
+                                prefix_eviction_order)
 from repro.models.model import Model
 
 GROWING = ("k", "v", "ckv", "krope")
@@ -259,3 +262,20 @@ class SlotKVCache:
     def nbytes_of(self, package) -> int:
         return sum(l.size * l.dtype.itemsize
                    for l in jax.tree_util.tree_leaves(package["caches"]))
+
+
+# ----- prefix KV pool ---------------------------------------------------------
+def prefix_hash(tokens: Sequence[int]) -> str:
+    """Content hash of a token prefix — the pool key. Hashing the TOKENS
+    (not a trace-level preamble id) means two conversations share pooled
+    rows iff their prefix bytes are actually identical; a workload that
+    lies about its preamble identity cannot poison another conversation's
+    context."""
+    arr = np.asarray(tokens, np.int32)
+    return hashlib.blake2b(arr.tobytes(), digest_size=16).hexdigest()
+
+
+# `PrefixKVPool` / `PrefixPoolEntry` (the node-level pool container both
+# backends share) live in repro.core.runtime next to the eviction rule and
+# are re-exported above: engine code keeps importing them from here, where
+# the device-row lifecycle (materialize / fold / invalidate) is implemented.

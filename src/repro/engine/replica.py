@@ -46,8 +46,8 @@ import numpy as np
 from repro.models import Model, build_model
 from repro.models.config import ModelConfig
 
-from .kvcache import (SlotKVCache, fold_decode_step, fold_prefill,
-                      slice_slot_prefix)
+from .kvcache import (PrefixKVPool, SlotKVCache, fold_decode_step,
+                      fold_prefill, prefix_hash, slice_slot_prefix)
 
 PREFILL_BUCKETS = (32, 64, 128, 256, 512, 1024, 2048, 4096)
 
@@ -105,7 +105,7 @@ class ReplicaEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
                  max_ctx: int = 2048, replica_id: int = 0, role: str = "decode",
                  warmup: bool = False, attention_impl: str = "xla",
-                 prefill_mode: str = "jit"):
+                 prefill_mode: str = "jit", prefix_pool_tokens: int = 0):
         """attention_impl: "xla" (default) serves decode attention through the
         pure-jnp model path on every backend; "pallas" routes GQA decode
         attention through the flash-decode kernel (ops.decode_attention) and
@@ -120,7 +120,13 @@ class ReplicaEngine:
         copy; append reads the prefix via `export_slot_full`) — the parity
         oracle and benchmark baseline. Families the jitted path does not
         cover (exact-length recurrent prefill, encoder-decoder) fall back
-        to the reference path regardless of the mode."""
+        to the reference path regardless of the mode.
+        prefix_pool_tokens: live-token budget for the node-level prefix KV
+        pool (0 = no pool). A turn-1 prefill called with `prefix_len` > 0
+        ALWAYS splits at that boundary (the split, not the pool, fixes the
+        math — see prefill_conversation); the pool only changes where the
+        prefix rows come from: a hit serves them through the fused
+        shared-prefix program instead of recomputing them."""
         assert prefill_mode in ("jit", "reference")
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -149,6 +155,15 @@ class ReplicaEngine:
         #                       denominator of prefill tokens/s)
         self.n_prefill_tokens = 0
         self.n_decode_tokens = 0
+        # node-level prefix KV pool (None = disabled). Pooled rows are
+        # owned by NO slot and never donated: the fused shared-prefix
+        # program reads them as a non-donated argument, so one entry can
+        # feed any number of prefills while slot caches churn in place.
+        self.prefix_pool = (PrefixKVPool(prefix_pool_tokens)
+                            if prefix_pool_tokens > 0 else None)
+        # prefix tokens served FROM the pool instead of recomputed —
+        # the engine-side ground truth behind NodeState.pooled_prefix_hits
+        self.n_pooled_prefix_tokens = 0
 
         self._decode = jax.jit(
             lambda p, t, c, pos, lens: self.model.decode_step(
@@ -291,6 +306,65 @@ class ReplicaEngine:
             _AOT_PREFILL_CACHE[key] = fn
         return fn
 
+    def _build_shared(self, ctx: int):
+        """Shared-prefix prefill program for one pooled ctx bucket (the
+        delta-token bucket is fixed by the .lower() specs at the _get_shared
+        call site) — the third prefill class: append-against-shared-prefix.
+        The POOLED rows (a non-donated argument shaped exactly like
+        `slice_slot_prefix`'s output) are first scattered into the slot at
+        offset 0 — the slot physically holds the full context afterwards,
+        same as if it had prefilled the preamble itself — then the delta
+        forward reads them back through the SAME `slice_slot_prefix` read
+        the append class uses, and the delta's KV scatters in at the traced
+        previous length. Byte-equality with the recompute path (turn-1
+        program on the preamble + append program on the delta) is a tested
+        property, not an aspiration: same reads, same folds, same programs
+        downstream."""
+        grouped, growing = self.kv._grouped, self.kv._growing
+        vocab = self.cfg.vocab_size
+
+        def run(params, caches, pool, tokens, slot, true_len, prev_len):
+            caches = fold_prefill(caches, pool, slot, 0, grouped, growing)
+            prefix = slice_slot_prefix(caches, slot, ctx, grouped, growing)
+            lens = jnp.reshape(prev_len.astype(jnp.int32), (1,))
+            logits, new = self.model.prefill(
+                params, tokens[None], caches=prefix, start_pos=prev_len,
+                kv_lens=lens, prefix_start=0, logits_at=true_len - 1,
+                attention_impl=self.attention_impl)
+            caches = fold_prefill(caches, new, slot, prev_len, grouped,
+                                  growing)
+            tok = jnp.argmax(logits[0, :vocab]).astype(jnp.int32)
+            return caches, tok
+
+        return jax.jit(run, donate_argnums=(1,))
+
+    def _pool_specs(self, ctx: int):
+        """ShapeDtypeStructs of a pooled entry at ctx bucket `ctx` — by
+        construction the exact output shape of `slice_slot_prefix`."""
+        grouped, growing = self.kv._grouped, self.kv._growing
+        _, cspec = self._aot_specs()
+        return jax.eval_shape(
+            lambda c: slice_slot_prefix(c, jnp.int32(0), ctx, grouped,
+                                        growing), cspec)
+
+    def _get_shared(self, pad_to: int, ctx: int):
+        """Fetch (or AOT-compile) the shared-prefix program for one (delta
+        token bucket, pooled ctx bucket). Compile time goes to
+        `self.compile_s`, never into measured dt."""
+        key = self._prefill_cache_key("shared", pad_to, ctx)
+        fn = _AOT_PREFILL_CACHE.get(key)
+        if fn is None:
+            t0 = time.perf_counter()
+            pspec, cspec = self._aot_specs()
+            scalar = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = self._build_shared(ctx).lower(
+                pspec, cspec, self._pool_specs(ctx),
+                jax.ShapeDtypeStruct((pad_to,), jnp.int32),
+                scalar, scalar, scalar).compile()
+            self.compile_s += time.perf_counter() - t0
+            _AOT_PREFILL_CACHE[key] = fn
+        return fn
+
     def warmup_prefill(self, lengths=None, ctx_limits=None) -> float:
         """Pre-compile the AOT prefill programs so a cold replica never
         charges a compile to its first conversations' TTFT. `lengths`
@@ -325,14 +399,41 @@ class ReplicaEngine:
                 min_prev = 0 if C <= CTX_BUCKET_MIN else C // 2 + 1
                 if min_prev + L <= self.kv.max_ctx:
                     self._get_append(L, C)
+                    if self.prefix_pool is not None:
+                        self._get_shared(L, C)
         return self.compile_s - before
 
     def prefill_conversation(self, slot: int, tokens: np.ndarray,
-                             frontend_embeds=None) -> Tuple[np.ndarray, float]:
+                             frontend_embeds=None, prefix_len: int = 0
+                             ) -> Tuple[np.ndarray, float]:
         """Turn-1 prefill into `slot`. Returns (next_token, measured_s);
         AOT compile time (cold bucket) is charged to `self.compile_s`,
-        never to the returned dt."""
+        never to the returned dt.
+
+        `prefix_len` > 0 declares tokens[:prefix_len] a SHARED PREAMBLE and
+        ALWAYS splits the prefill at that boundary — turn-1 class on the
+        preamble, append class on the delta — whether or not a pool is
+        configured or holds the rows. The split, not the pool, fixes the
+        math: both the pool-hit and the recompute path run the same
+        masked forward over the same prefix-read downstream, so per-turn
+        token streams are byte-identical pool-on vs pool-off. The pool
+        only changes WHERE the preamble rows come from: a hit folds the
+        pooled rows into the slot (one fused dispatch, zero preamble
+        FLOPs); a miss recomputes them and then materializes zero-masked
+        copies into the pool for the next conversation."""
         true_len = len(tokens)
+        if prefix_len:
+            if not 0 < prefix_len < true_len:
+                raise ValueError(
+                    f"prefill_conversation: prefix_len {prefix_len} must be "
+                    f"in (0, {true_len}) — the turn needs a non-empty delta "
+                    f"after the shared preamble")
+            if frontend_embeds is not None:
+                raise ValueError(
+                    "prefill_conversation: shared-prefix split does not "
+                    "compose with frontend embeds")
+            return self._prefill_split(slot, np.asarray(tokens, np.int32),
+                                       int(prefix_len))
         n_front = 0
         if self.cfg.frontend != "none" and frontend_embeds is not None:
             n_front = frontend_embeds.shape[1]
@@ -355,6 +456,108 @@ class ReplicaEngine:
         self.prefill_s += dt
         self.n_prefill_tokens += true_len
         return np.int32(tok), dt
+
+    def _prefill_split(self, slot: int, tokens: np.ndarray, prefix_len: int
+                       ) -> Tuple[np.ndarray, float]:
+        """Shared-preamble turn-1 prefill: the always-split path behind
+        `prefill_conversation(prefix_len=...)`. Pool hit -> fused
+        shared-prefix program (or the host-side fold + eager append in
+        reference mode); miss or no pool -> turn-1 class on the preamble,
+        pool populate (when enabled), append class on the delta."""
+        self._check_prefill_room(slot, len(tokens))
+        prefix = tokens[:prefix_len]
+        delta = tokens[prefix_len:]
+        pool = self.prefix_pool
+        key = prefix_hash(prefix) if pool is not None else None
+        if pool is not None and pool.contains(key):
+            return self._prefill_from_pool(slot, key, delta, prefix_len)
+        # Miss (or no pool): recompute the preamble through the normal
+        # turn-1 class, then serve the delta through the append class —
+        # the exact programs a pool hit replays, so the streams match.
+        tok_p, dt = self.prefill_conversation(slot, prefix)
+        del tok_p  # the preamble's sampled token is never emitted
+        if pool is not None:
+            t0 = time.perf_counter()
+            ctx = ctx_bucket(prefix_len, self.kv.max_ctx)
+            rows = self._materialize_prefix(slot, prefix_len, ctx)
+            pool.put(key, rows, prefix_len, ctx)
+            export_dt = time.perf_counter() - t0
+            self.compute_s += export_dt
+            self.prefill_s += export_dt
+            dt += export_dt
+        tok, dt_a = self.append_prefill(slot, delta)
+        return tok, dt + dt_a
+
+    def _materialize_prefix(self, slot: int, length: int, ctx: int):
+        """Copy a slot's first `length` cache rows out at ctx bucket `ctx`,
+        zero-masked beyond `length` — the immutable pooled representation.
+        Must run BEFORE the delta append touches the slot (fixed-state
+        leaves would otherwise reflect the full context) and before any
+        donated program kills the buffers the slice reads."""
+        grouped, growing = self.kv._grouped, self.kv._growing
+        rows = slice_slot_prefix(self.kv.caches, jnp.int32(slot), ctx,
+                                 grouped, growing)
+
+        def mask(leaf, g, gr):
+            if not gr:
+                return leaf
+            if g:  # (G, 1, ctx, ...)
+                pos = jnp.arange(leaf.shape[2]).reshape(
+                    (1, 1, -1) + (1,) * (leaf.ndim - 3))
+            else:  # (1, ctx, ...)
+                pos = jnp.arange(leaf.shape[1]).reshape(
+                    (1, -1) + (1,) * (leaf.ndim - 2))
+            return jnp.where(pos < length, leaf, jnp.zeros_like(leaf))
+
+        rows = jax.tree_util.tree_map(mask, rows, grouped, growing)
+        return jax.block_until_ready(rows)
+
+    def _prefill_from_pool(self, slot: int, key: str, delta: np.ndarray,
+                           prefix_len: int) -> Tuple[np.ndarray, float]:
+        """Pool-hit turn-1: fold the pooled preamble rows into the slot and
+        run the delta forward against them — zero preamble FLOPs. The entry
+        is pinned across the read so eviction can never rip the rows out
+        from under the dispatch; `get` records the observed hit the
+        eviction rule orders on."""
+        pool = self.prefix_pool
+        e = pool.get(key)
+        pool.pin(key)
+        try:
+            true_len = len(delta)
+            if not self._use_jit_prefill():
+                # reference mode: host-side fold of the pooled rows, then
+                # the eager append oracle over them
+                t0 = time.perf_counter()
+                self.kv.caches = fold_prefill(
+                    self.kv.caches, e.caches, slot, 0,
+                    self.kv._grouped, self.kv._growing)
+                self.kv.lengths[slot] = prefix_len
+                fold_dt = time.perf_counter() - t0
+                self.compute_s += fold_dt
+                self.prefill_s += fold_dt
+                tok, dt = self._append_reference(slot, delta)
+                self.n_pooled_prefix_tokens += prefix_len
+                return tok, fold_dt + dt
+            pad_to = self._prefill_pad(true_len,
+                                       self.kv.max_ctx - prefix_len)
+            fn = self._get_shared(pad_to, e.ctx)  # compile OFF the clock
+            toks = np.zeros(pad_to, np.int32)
+            toks[:true_len] = delta
+            t0 = time.perf_counter()
+            caches, tok = fn(self.params, self.kv.caches, e.caches,
+                             jnp.asarray(toks), np.int32(slot),
+                             np.int32(true_len), np.int32(prefix_len))
+            tok = jax.block_until_ready(tok)
+            self.kv.caches = caches  # donated: old buffers are dead
+            self.kv.lengths[slot] = prefix_len + true_len
+            dt = time.perf_counter() - t0
+            self.compute_s += dt
+            self.prefill_s += dt
+            self.n_prefill_tokens += true_len
+            self.n_pooled_prefix_tokens += prefix_len
+            return np.int32(tok), dt
+        finally:
+            pool.unpin(key)
 
     def _prefill_reference(self, slot: int, tokens: np.ndarray,
                            frontend_embeds, n_front: int

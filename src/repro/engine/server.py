@@ -66,6 +66,7 @@ from repro.core.runtime import (Admission, AdmissionQueue,
 from repro.core.scheduler import Scheduler
 from repro.core.signals import ClusterView, NodeState, PrefillLatencyCurve
 
+from .kvcache import prefix_hash
 from .replica import DECODE_CHUNKS, ReplicaEngine, decode_chunk_floor
 
 
@@ -179,6 +180,8 @@ class EngineServer(Runtime):
         self._admission: Dict[int, AdmissionQueue] = {
             r.replica_id: AdmissionQueue(r.replica_id) for r in replicas}
         self._tokens: Dict[Tuple[int, int], np.ndarray] = {}
+        # shared-preamble token blocks, keyed (preamble_id, length)
+        self._preambles: Dict[Tuple[int, int], np.ndarray] = {}
         self._slots: Dict[int, Tuple[int, int]] = {}  # cid -> (node, slot)
         self._decode_q: Dict[int, List[_TurnTask]] = {
             r.replica_id: [] for r in replicas}
@@ -226,6 +229,22 @@ class EngineServer(Runtime):
         self.sampled_tokens: Dict[Tuple[int, int], List[int]] = {}
 
     # ----- helpers ---------------------------------------------------------------
+    def _preamble_token_block(self, preamble_id: int, n: int) -> np.ndarray:
+        """Deterministic shared-preamble token content: keyed per
+        (preamble_id, length), NOT per cid, so every conversation declaring
+        the same preamble gets byte-identical prefix bytes — which is what
+        makes `prefix_hash` actually collide across them (the pool keys on
+        token content, never on the trace-level id)."""
+        key = (int(preamble_id), int(n))
+        if key not in self._preambles:
+            vocab = next(iter(self.replicas.values())).cfg.vocab_size
+            rng = np.random.RandomState(
+                (self.seed * 1000003 + 0x5eed + preamble_id * 104729)
+                % (2 ** 31))
+            self._preambles[key] = rng.randint(
+                0, vocab, size=n).astype(np.int32)
+        return self._preambles[key]
+
     def _turn_tokens(self, conv: Conversation, idx: int) -> np.ndarray:
         # keyed per (cid, turn) so token content is independent of the ORDER
         # turns are first reached — decode chunking / scheduling / ADMISSION
@@ -237,9 +256,56 @@ class EngineServer(Runtime):
             rng = np.random.RandomState(
                 (self.seed * 1000003 + conv.cid * 9973 + idx * 7919)
                 % (2 ** 31))
-            self._tokens[key] = rng.randint(
+            toks = rng.randint(
                 0, vocab, size=conv.turns[idx].append_tokens).astype(np.int32)
+            if (idx == 0 and conv.preamble_id is not None
+                    and conv.preamble_tokens > 0):
+                # turn 1 opens with the shared preamble; only the tail past
+                # it is per-conversation content
+                toks[:conv.preamble_tokens] = self._preamble_token_block(
+                    conv.preamble_id, conv.preamble_tokens)
+            self._tokens[key] = toks
         return self._tokens[key]
+
+    def _prefix_split(self, conv: Conversation, node: ReplicaEngine) -> int:
+        """The prefix length turn 1 splits at on `node` (0 = no split): the
+        declared preamble, EXCEPT for frontend models, whose prefill
+        prepends non-token positions the split cannot express — there
+        neither the pool nor the split applies, consistently, so streams
+        stay comparable pool-on vs pool-off."""
+        if conv.preamble_tokens <= 0 or node.cfg.frontend != "none":
+            return 0
+        return conv.preamble_tokens
+
+    def _pool_probe(self, node_id: int, conv: Conversation) -> Optional[int]:
+        """OBSERVED pool state at offer time: returns the delta-token
+        prefill-compute charge when `node_id`'s pool currently holds this
+        conversation's preamble rows (side-effect-free `contains` — the hit
+        counter records only reads that feed a prefill), else None (charge
+        the full first turn). The charge is fixed at offer time; if the
+        entry is evicted before the prefill runs, the recompute is honest
+        extra work, not a new backlog charge — the counter stays an
+        observation of what was known when the work was accepted."""
+        node = self.replicas[node_id]
+        p = self._prefix_split(conv, node)
+        if p <= 0 or node.prefix_pool is None:
+            return None
+        key = prefix_hash(self._turn_tokens(conv, 0)[:p])
+        if node.prefix_pool.contains(key):
+            return conv.first_input_len - p
+        return None
+
+    def _sync_pool_state(self, node_id: int):
+        """Mirror the replica's prefix-pool ground truth into the NodeState
+        observables (strict accounting asserts exactly this equality)."""
+        pool = self.replicas[node_id].prefix_pool
+        if pool is None:
+            return
+        st = self.states[node_id]
+        st.pooled_prefix_tokens = pool.pooled_tokens
+        st.pooled_prefix_entries = pool.n_entries
+        st.pooled_prefix_hits = pool.total_hits
+        st.pooled_prefix_evictions = pool.n_evictions
 
     def _push(self, t: float, fn):
         heapq.heappush(self._events, (t, next(self._seq), fn))
@@ -308,24 +374,48 @@ class EngineServer(Runtime):
             assert st.used_slots == int(node.kv.active.sum()), (
                 f"replica {nid}: NodeState.used_slots={st.used_slots} != "
                 f"{int(node.kv.active.sum())} active KV slots")
-            parked = sum(a.need_tokens for a in
+            parked = sum(a.charge for a in
                          self._admission[nid].admissions("arrival"))
             assert st.queued_prefill_tokens == parked, (
                 f"replica {nid}: NodeState.queued_prefill_tokens="
-                f"{st.queued_prefill_tokens} != {parked} first-turn tokens "
-                f"parked in its admission queue (backlog counter drift)")
+                f"{st.queued_prefill_tokens} != {parked} prefill-compute "
+                f"tokens parked in its admission queue (backlog counter "
+                f"drift; charges are delta-tokens for observed pool hits)")
+            pool = node.prefix_pool
+            if pool is not None:
+                assert st.pooled_prefix_tokens == pool.pooled_tokens, (
+                    f"replica {nid}: NodeState.pooled_prefix_tokens="
+                    f"{st.pooled_prefix_tokens} != pool ground truth "
+                    f"{pool.pooled_tokens}")
+                assert st.pooled_prefix_entries == pool.n_entries, (
+                    f"replica {nid}: NodeState.pooled_prefix_entries="
+                    f"{st.pooled_prefix_entries} != {pool.n_entries}")
+                assert st.pooled_prefix_hits == pool.total_hits, (
+                    f"replica {nid}: NodeState.pooled_prefix_hits="
+                    f"{st.pooled_prefix_hits} != {pool.total_hits}")
+                assert st.pooled_prefix_evictions == pool.n_evictions, (
+                    f"replica {nid}: NodeState.pooled_prefix_evictions="
+                    f"{st.pooled_prefix_evictions} != {pool.n_evictions}")
 
     # ----- arrival & turn-1 prefill -------------------------------------------------
     def _arrive(self, conv: Conversation):
         pl = self.sched.place_first_prefill(view_of(conv), self.view)
         st = self.states[pl.node_id]
-        # backlog observable covers parked + admitted-unstarted prefill work
-        st.queued_prefill_tokens += conv.first_input_len
+        # backlog observable covers parked + admitted-unstarted prefill
+        # work. With an OBSERVED pool hit on the placed node, only the
+        # delta past the pooled preamble is prefill COMPUTE — charging the
+        # full turn would overstate the backlog `prefill_backlog_s` reads
+        # (need_tokens stays the full context: the slot still lands all of
+        # it, so the headroom/fit ask is unchanged).
+        delta = self._pool_probe(pl.node_id, conv)
+        charge = conv.first_input_len if delta is None else delta
+        st.queued_prefill_tokens += charge
         self._offer(pl.node_id,
                     Admission(conv.cid, conv.first_input_len,
-                              lambda nid, conv=conv:
-                              self._prefill_turn1(conv, nid),
-                              kind="arrival"),
+                              lambda nid, conv=conv, charge=charge:
+                              self._prefill_turn1(conv, nid, charge),
+                              kind="arrival",
+                              charge_tokens=None if delta is None else delta),
                     self._now)
 
     def _on_reoffer_move(self, adm: Admission, from_node: int, to_node: int):
@@ -336,16 +426,19 @@ class EngineServer(Runtime):
         the first node for the whole parked interval — the backlog drift
         strict accounting now rejects.)"""
         if adm.kind == "arrival":
-            self.states[from_node].queued_prefill_tokens -= adm.need_tokens
-            self.states[to_node].queued_prefill_tokens += adm.need_tokens
+            self.states[from_node].queued_prefill_tokens -= adm.charge
+            self.states[to_node].queued_prefill_tokens += adm.charge
 
-    def _prefill_turn1(self, conv: Conversation, node_id: int):
+    def _prefill_turn1(self, conv: Conversation, node_id: int,
+                       charge: Optional[int] = None):
         node = self.replicas[node_id]
         st = self.states[node_id]
         start = max(self._now, self.clock[node_id])
         self.sessions[conv.cid].transition(PREFILLING, start)
 
-        # run the real prefill
+        # run the real prefill; a declared preamble ALWAYS splits turn 1 at
+        # its boundary (the split, not the pool, fixes the math — streams
+        # stay byte-identical pool-on vs pool-off)
         slot = node.kv.acquire()
         st.used_slots += 1
         tokens = self._turn_tokens(conv, 0)
@@ -353,10 +446,13 @@ class EngineServer(Runtime):
         if node.cfg.frontend != "none":
             fe = jnp.zeros((1, node.cfg.frontend_len or node.cfg.encoder_seq,
                             node.cfg.d_model), node.cfg.jnp_dtype)
-        next_tok, dt = node.prefill_conversation(slot, tokens, fe)
+        next_tok, dt = node.prefill_conversation(
+            slot, tokens, fe, prefix_len=self._prefix_split(conv, node))
+        self._sync_pool_state(node_id)
         done_t = start + dt
         self.clock[node_id] = done_t
-        st.queued_prefill_tokens -= conv.first_input_len
+        st.queued_prefill_tokens -= (conv.first_input_len if charge is None
+                                     else charge)
         # mirror the slot's WRITTEN length (includes frontend positions),
         # not the nominal input length — the two drift for frontend models
         written = int(node.kv.lengths[slot])
@@ -821,10 +917,18 @@ class EngineServer(Runtime):
         # the mirroring observables wholesale (strict accounting keeps
         # checking dead replicas against exactly this ground truth)
         node.kv.invalidate_all()
+        if node.prefix_pool is not None:
+            # pooled rows die with the node's slot cache: drop them so a
+            # recovered conversation re-populates through the normal miss
+            # path instead of dangling a reference to dead device buffers
+            node.prefix_pool.invalidate_all()
         st.active_kv_tokens = 0
         st.used_slots = 0
         st.active_conversations = 0
         st.reserved_kv_tokens = 0
+        # resident pool observables zero with the pool; the cumulative
+        # hit/eviction counters survive (events that already happened)
+        self._sync_pool_state(node_id)
         self._decode_q[node_id] = []
         self._ready[node_id] = []
         self._iter_at[node_id] = None
@@ -911,7 +1015,13 @@ class EngineServer(Runtime):
         if node.cfg.frontend != "none":
             fe = jnp.zeros((1, node.cfg.frontend_len or node.cfg.encoder_seq,
                             node.cfg.d_model), node.cfg.jnp_dtype)
-        next_tok, dt = node.prefill_conversation(slot, ctx, fe)
+        # replay splits at the SAME preamble boundary the original turn-1
+        # did (the journaled ctx opens with it), so the rebuilt stream is
+        # byte-identical to the failure-free run and the healthy node's
+        # pool serves/repopulates the preamble exactly like a fresh arrival
+        next_tok, dt = node.prefill_conversation(
+            slot, ctx, fe, prefix_len=self._prefix_split(conv, node))
+        self._sync_pool_state(node_id)
         done_t = start + dt
         self.clock[node_id] = done_t
         st.queued_prefill_tokens -= len(ctx)

@@ -45,6 +45,15 @@ class TraceConfig:
     max_turns: int = 40
     # tool latency between turns
     tool_mean_s: float = 1.5
+    # Shared preamble (agentic fleets launch many conversations from the
+    # same system-prompt / tool-schema prefix). preamble_tokens > 0 gives a
+    # `preamble_share` fraction of conversations a shared prefix of that
+    # length inside turn 1, drawn uniformly from `n_preambles` distinct
+    # identities. The preamble EXTENDS turn 1 (sampled task prompt stays
+    # intact) so the non-preamble token distribution is unchanged.
+    preamble_tokens: int = 0
+    n_preambles: int = 1
+    preamble_share: float = 1.0
 
 
 def _lognormal(rng, median, sigma, cap) -> int:
@@ -68,7 +77,17 @@ def generate_conversation(cfg: TraceConfig, rng: np.random.RandomState,
         tool = float(rng.exponential(cfg.tool_mean_s)) if i < n_turns - 1 else 0.0
         turns.append(Turn(append_tokens=append, output_tokens=out,
                           tool_time_s=tool))
-    return Conversation(cid=cid, arrival_s=arrival_s, turns=turns)
+    pid: Optional[int] = None
+    ptok = 0
+    if cfg.preamble_tokens > 0 and rng.uniform() < cfg.preamble_share:
+        pid = int(rng.randint(cfg.n_preambles))
+        ptok = int(cfg.preamble_tokens)
+        t0 = turns[0]
+        turns[0] = Turn(append_tokens=t0.append_tokens + ptok,
+                        output_tokens=t0.output_tokens,
+                        tool_time_s=t0.tool_time_s)
+    return Conversation(cid=cid, arrival_s=arrival_s, turns=turns,
+                        preamble_id=pid, preamble_tokens=ptok)
 
 
 def generate_trace(n_conversations: int, rate_conv_per_s: float,

@@ -252,6 +252,90 @@ def test_mixed_node_death_with_parked_arrivals(qwen):
 
 
 # --------------------------------------------------------------------------- #
+# prefix pool corpse contract: pooled rows die with the node's slot cache
+# --------------------------------------------------------------------------- #
+_PREAMBLE = 24
+
+
+def _pooled_pair(cfg, params):
+    return [ReplicaEngine(cfg, params, n_slots=3, max_ctx=256, replica_id=i,
+                          role="mixed", prefix_pool_tokens=4 * _PREAMBLE)
+            for i in (0, 1)]
+
+
+def _preamble_trace(n=5):
+    """Shared-preamble fleet, arrivals spaced so each prefill (tens of ms)
+    lands before the next arrival probes the pool."""
+    return [Conversation(cid=i, arrival_s=0.3 * i, turns=[
+        Turn(append_tokens=_PREAMBLE + 12 + 2 * i, output_tokens=6,
+             tool_time_s=0.05),
+        Turn(append_tokens=8, output_tokens=5, tool_time_s=0.0)],
+        preamble_id=0, preamble_tokens=_PREAMBLE) for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def pooled_baseline(qwen):
+    cfg, _, params = qwen
+    srv = EngineServer(make_scheduler("conserve"), _pooled_pair(cfg, params),
+                       record_tokens=True, strict_accounting=True)
+    recs = srv.serve(_preamble_trace())
+    assert len(recs) == 5
+    assert sum(s.pooled_prefix_hits for s in srv.states.values()) > 0
+    span = max(t.last_token_s for r in recs for t in r.turns)
+    return srv.sampled_tokens, span
+
+
+# fixed pseudo-random (victim, time-fraction) schedules: pooled rows must
+# die with the node and recovery must re-populate through the normal miss
+# path — never a dangling reference to dead device buffers
+_POOL_RNG = np.random.RandomState(7_2026)
+_POOL_SCHEDULES = [(int(_POOL_RNG.randint(0, 2)),
+                    float(_POOL_RNG.uniform(0.05, 0.95)))
+                   for _ in range(3)]
+
+
+@pytest.mark.parametrize("victim,frac", _POOL_SCHEDULES,
+                         ids=[f"n{v}@{f:.2f}" for v, f in _POOL_SCHEDULES])
+def test_seeded_failure_invalidates_pool_and_replays_identical(
+        qwen, pooled_baseline, victim, frac):
+    """A replica death takes its pooled prefix rows with it (same
+    invalidate_all moment as the slot cache); recovered conversations
+    re-populate the survivor's pool, and every stream stays byte-identical
+    to the pooled failure-free run."""
+    cfg, _, params = qwen
+    tokens, span = pooled_baseline
+    srv = EngineServer(make_scheduler("conserve"), _pooled_pair(cfg, params),
+                       record_tokens=True, strict_accounting=True)
+    srv.fail_replica(victim, frac * span)
+    recs = srv.serve(_preamble_trace())
+    assert len(recs) == 5
+    assert all(s.done for s in srv.sessions.values())
+    assert srv.sampled_tokens == tokens
+
+    dead = srv.states[victim]
+    assert not dead.alive
+    # resident pool observables zero on the corpse, ground truth agrees
+    assert dead.pooled_prefix_tokens == 0 and dead.pooled_prefix_entries == 0
+    assert srv.replicas[victim].prefix_pool.n_entries == 0
+    # the shared-preamble fleet keeps (or re-establishes) pooled rows on the
+    # survivor — recovery goes through the normal populate-on-miss path
+    survivor = srv.states[1 - victim]
+    assert survivor.pooled_prefix_entries >= 1
+    srv.check_accounting()  # includes the pool mirror reconciliation
+
+
+def test_pool_survives_failure_free_pooled_run(qwen, pooled_baseline):
+    """Control for the corpse contract: without a failure the pooled rows
+    stay resident to the end of the serve."""
+    cfg, _, params = qwen
+    srv = EngineServer(make_scheduler("conserve"), _pooled_pair(cfg, params),
+                       record_tokens=True, strict_accounting=True)
+    srv.serve(_preamble_trace())
+    assert any(s.pooled_prefix_entries > 0 for s in srv.states.values())
+    assert all(s.alive for s in srv.states.values())
+
+
+# --------------------------------------------------------------------------- #
 # loud failure modes
 # --------------------------------------------------------------------------- #
 def test_no_healthy_decoder_raises(qwen):

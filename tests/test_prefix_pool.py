@@ -1,0 +1,255 @@
+"""Shared-prefix KV pool contract: the one pool container both backends age
+(observed-reuse eviction, refcount pinning, put-refusal), the engine's
+third prefill class (fold pooled rows + delta forward) with byte-identity
+pool-on vs pool-off and across eviction schedules, delta-token admission
+charging under strict accounting, and the simulator mirror."""
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import A40, NodeCostModel, ServedModelProfile
+from repro.cluster.simulator import ClusterSimulator, SimNode
+from repro.configs import get_reduced
+from repro.core import make_scheduler
+from repro.core.conversation import Conversation, Turn
+from repro.core.runtime import PrefixKVPool, prefix_eviction_order
+from repro.engine import EngineServer, ReplicaEngine
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# --------------------------------------------------------------------------- #
+# the pool container (no jax): observed-reuse eviction, pinning, refusal
+# --------------------------------------------------------------------------- #
+def test_eviction_order_fewest_hits_then_least_recently_hit():
+    pool = PrefixKVPool(300)
+    for k in ("a", "b", "c"):
+        assert pool.put(k, None, 100, 128)
+    # b observed twice, a once, c once but hit AFTER a
+    pool.get("b"), pool.get("a"), pool.get("b"), pool.get("c")
+    order = prefix_eviction_order(pool.entries)
+    # fewest hits first (a, c before b); tie a-vs-c broken least-recently-hit
+    assert order == ["a", "c", "b"]
+
+
+def test_put_evicts_by_observed_reuse_never_the_hot_entry():
+    pool = PrefixKVPool(200)
+    assert pool.put("hot", None, 100, 128)
+    assert pool.put("cold", None, 100, 128)
+    pool.get("hot")
+    assert pool.put("new", None, 100, 128)   # must evict exactly "cold"
+    assert pool.contains("hot") and pool.contains("new")
+    assert not pool.contains("cold")
+    assert pool.n_evictions == 1
+
+
+def test_pinned_entry_never_evicted_and_put_refuses():
+    pool = PrefixKVPool(100)
+    assert pool.put("pinned", None, 100, 128)
+    pool.get("pinned")
+    pool.pin("pinned")
+    # a reader holds the rows: eviction must exclude it entirely...
+    assert prefix_eviction_order(pool.entries) == []
+    # ...and put REFUSES rather than rip rows out from under the reader
+    assert not pool.put("other", None, 50, 64)
+    assert pool.contains("pinned") and not pool.contains("other")
+    assert pool.n_evictions == 0
+    pool.unpin("pinned")
+    # the moment the reader releases, the same put succeeds
+    assert pool.put("other", None, 50, 64)
+    assert not pool.contains("pinned")
+
+
+def test_unpin_without_pin_is_loud():
+    pool = PrefixKVPool(100)
+    pool.put("k", None, 10, 16)
+    with pytest.raises(RuntimeError, match="unpinned more times"):
+        pool.unpin("k")
+
+
+def test_put_semantics_oversize_reput_and_contains_is_side_effect_free():
+    pool = PrefixKVPool(100)
+    assert not pool.put("huge", None, 101, 128)  # can never fit
+    assert pool.put("k", None, 80, 128)
+    assert pool.put("k", None, 80, 128)          # re-put: immutable, no-op
+    assert pool.n_entries == 1 and pool.pooled_tokens == 80
+    pool.contains("k")
+    assert pool.total_hits == 0                  # contains never records
+    pool.get("k")
+    assert pool.total_hits == 1                  # get records the reuse
+
+
+def test_invalidate_all_keeps_cumulative_counters():
+    pool = PrefixKVPool(200)
+    pool.put("a", None, 50, 64)
+    pool.get("a")
+    pool.put("b", None, 160, 192)                # evicts a
+    pool.invalidate_all()
+    assert pool.n_entries == 0 and pool.pooled_tokens == 0
+    assert pool.total_hits == 1 and pool.n_evictions == 1  # history survives
+    assert pool.put("a", None, 50, 64)           # reusable after invalidation
+
+
+def test_prefix_pool_pressure_reads_only_observed_counters():
+    """The scheduler-visible pool signal: evictions per recorded hit, built
+    purely from counters of events that already happened."""
+    from repro.core.scheduler import Scheduler
+    from repro.core.signals import ClusterView, NodeState
+    st = NodeState(node_id=0, role="prefill")
+    view = ClusterView({0: st}, None)
+    assert Scheduler.prefix_pool_pressure(view, 0) == 0.0
+    st.pooled_prefix_evictions = 3                    # churn before any hit
+    assert Scheduler.prefix_pool_pressure(view, 0) == 3.0
+    st.pooled_prefix_hits = 6
+    assert Scheduler.prefix_pool_pressure(view, 0) == 0.5
+
+
+# --------------------------------------------------------------------------- #
+# engine: byte-identity pool-on vs pool-off, across eviction schedules
+# --------------------------------------------------------------------------- #
+def _preamble_trace(n=4, preamble=24, n_preambles=1):
+    """n conversations sharing preambles round-robin; arrivals spaced 0.3s
+    so every prefill (tens of ms) lands before the next arrival — later
+    arrivals OBSERVE the pooled preamble at probe time."""
+    return [Conversation(
+        cid=i, arrival_s=0.3 * i,
+        turns=[Turn(append_tokens=preamble + 12 + 2 * i, output_tokens=6,
+                    tool_time_s=0.0),
+               Turn(append_tokens=8, output_tokens=5, tool_time_s=0.0)],
+        preamble_id=i % n_preambles, preamble_tokens=preamble)
+        for i in range(n)]
+
+
+def _serve(cfg, params, trace, pool_tokens, n_preambles=1):
+    rep = ReplicaEngine(cfg, params, n_slots=4, max_ctx=256, replica_id=0,
+                        role="mixed", prefix_pool_tokens=pool_tokens)
+    srv = EngineServer(make_scheduler("conserve"), [rep],
+                       record_tokens=True, strict_accounting=True)
+    recs = srv.serve(trace)
+    assert len(recs) == len(trace)
+    srv.check_accounting()
+    return srv
+
+
+def test_stream_byte_identity_pool_on_off_and_under_eviction(qwen):
+    """The split, not the pool, fixes the math: pool off, pool with every
+    preamble resident, and a thrashing one-entry pool must all emit the
+    SAME per-(cid, turn) streams — eviction schedules change timing and
+    recompute, never content."""
+    cfg, _, params = qwen
+    preamble = 24
+    trace = _preamble_trace(n=6, preamble=preamble, n_preambles=2)
+    off = _serve(cfg, params, trace, pool_tokens=0, n_preambles=2)
+    on = _serve(cfg, params, trace, pool_tokens=8 * preamble, n_preambles=2)
+    # capacity for ONE preamble: the two identities evict each other
+    thrash = _serve(cfg, params, trace, pool_tokens=preamble, n_preambles=2)
+
+    assert on.sampled_tokens == off.sampled_tokens
+    assert thrash.sampled_tokens == off.sampled_tokens
+
+    st_off, st_on, st_thr = (s.states[0] for s in (off, on, thrash))
+    assert st_off.pooled_prefix_hits == 0 and st_off.pooled_prefix_entries == 0
+    assert st_on.pooled_prefix_hits >= 4        # 6 convs, 2 first-touches
+    assert st_on.pooled_prefix_entries == 2
+    assert st_on.pooled_prefix_evictions == 0
+    assert st_thr.pooled_prefix_evictions > 0   # the schedule really thrashed
+    # pooled preamble reads are charged to the dedicated observable, never
+    # double-counted as prefill compute
+    assert st_on.pooled_prefix_tokens == 2 * preamble
+
+
+class _SpyOffers(EngineServer):
+    """Record every arrival admission's (need, charge) at offer time."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.offers = {}
+
+    def _offer(self, node_id, adm, now):
+        if adm.kind == "arrival":
+            self.offers[adm.cid] = (adm.need_tokens, adm.charge)
+        return super()._offer(node_id, adm, now)
+
+
+def test_strict_accounting_charges_observed_delta_for_parked_pool_hits(qwen):
+    """An arrival that OBSERVES a pooled preamble parks charging only its
+    delta tokens as prefill backlog (need_tokens stays the full context —
+    the slot still lands all of it). strict_accounting reconciles the
+    parked sum against queued_prefill_tokens at every event, so a full-token
+    charge anywhere in the parked interval would fail the serve itself."""
+    cfg, _, params = qwen
+    preamble = 24
+    # cid 0 populates the pool, then holds the ONLY slot in a 2s tool wait;
+    # cids 1-2 arrive mid-wait: pool probe hits, admission parks
+    trace = [Conversation(cid=0, arrival_s=0.0, turns=[
+                 Turn(append_tokens=preamble + 12, output_tokens=6,
+                      tool_time_s=2.0),
+                 Turn(append_tokens=8, output_tokens=5, tool_time_s=0.0)],
+                 preamble_id=0, preamble_tokens=preamble)]
+    trace += [Conversation(cid=i, arrival_s=1.0 + 1e-3 * i, turns=[
+                  Turn(append_tokens=preamble + 10 + 2 * i, output_tokens=5,
+                       tool_time_s=0.0)],
+                  preamble_id=0, preamble_tokens=preamble)
+              for i in (1, 2)]
+    rep = ReplicaEngine(cfg, params, n_slots=1, max_ctx=256, replica_id=0,
+                        role="mixed", prefix_pool_tokens=4 * preamble)
+    srv = _SpyOffers(make_scheduler("conserve"), [rep],
+                     record_tokens=True, strict_accounting=True)
+    recs = srv.serve(trace)
+    assert len(recs) == 3 and all(s.done for s in srv.sessions.values())
+    assert srv.n_deferred_admissions >= 2       # both hits really parked
+
+    need0, charge0 = srv.offers[0]
+    assert charge0 == need0 == preamble + 12    # cold populate: full charge
+    for i in (1, 2):
+        need, charge = srv.offers[i]
+        assert need == preamble + 10 + 2 * i    # fit ask: full context
+        assert charge == need - preamble        # backlog charge: delta only
+    assert srv.states[0].pooled_prefix_hits >= 2
+    srv.check_accounting()
+
+
+# --------------------------------------------------------------------------- #
+# simulator mirror: identity keys, delta charge, same eviction aging
+# --------------------------------------------------------------------------- #
+def _sim(pool_tokens, trace):
+    cost = NodeCostModel(A40, ServedModelProfile())
+    nodes = [SimNode(node_id=0, role="prefill", cost=cost,
+                     prefix_pool_tokens=pool_tokens),
+             SimNode(node_id=1, role="decode", cost=cost)]
+    sim = ClusterSimulator(make_scheduler("conserve"), nodes)
+    recs = sim.serve(trace)
+    assert all(s.done for s in sim.sessions.values())
+    return sim, recs
+
+
+def test_sim_pool_mirror_hits_and_output_parity():
+    trace = _preamble_trace(n=6, preamble=24, n_preambles=1)
+    off, off_recs = _sim(0, trace)
+    on, on_recs = _sim(96, trace)
+    pf = on.nodes[0].state
+    assert pf.pooled_prefix_hits == 5           # first populates, rest hit
+    assert pf.pooled_prefix_entries == 1
+    assert pf.pooled_prefix_tokens == 24
+    assert off.nodes[0].state.pooled_prefix_hits == 0
+    # the pool changes prefill COST, never outcomes: same tokens decoded
+    per_cid = lambda recs: {  # noqa: E731
+        r.cid: [t.n_output_tokens for t in r.turns] for r in recs}
+    assert per_cid(on_recs) == per_cid(off_recs)
+    # a pooled hit shortens turn-1 prefill: total prefiller busy time drops
+    assert on.nodes[0].busy_s < off.nodes[0].busy_s
+
+
+def test_sim_pool_thrash_evicts_but_completes():
+    trace = _preamble_trace(n=6, preamble=24, n_preambles=2)
+    sim, recs = _sim(24, trace)                 # room for ONE identity
+    pf = sim.nodes[0].state
+    assert pf.pooled_prefix_evictions > 0
+    assert len(recs) == 6

@@ -202,6 +202,78 @@ class TestToolWatchdog:
 
 
 class TestElasticity:
+    @staticmethod
+    def _idle_cluster(n_decode=3):
+        sim = build_cluster(make_scheduler("conserve"), n_prefill=1,
+                            n_decode=n_decode)
+        cost = NodeCostModel(A40, ServedModelProfile())
+        return sim, Autoscaler(sim, cost)
+
+    def test_scale_in_refuses_decoder_with_parked_admissions(self):
+        """Regression: scale-in used to flip `alive` directly, stranding any
+        conversations parked in the victim's admission queue (a dead queue
+        is never pumped). The drain must REFUSE a candidate whose queue
+        holds work."""
+        from repro.core.runtime import Admission
+        sim, scaler = self._idle_cluster()
+        victim = min(nid for nid, n in sim.nodes.items()
+                     if n.role == "decode")  # idle tie -> first decoder
+        sim._admission[victim].push(
+            Admission(99, 64, lambda nid: None, kind="arrival"))
+        scaler._tick()  # cluster idle: util 0 < low watermark
+        assert sim.nodes[victim].alive, (
+            "scale-in retired a decoder with parked admissions")
+        assert all(n.alive for n in sim.nodes.values())
+        assert not any(e[1] == "scale_in" for e in scaler.events)
+
+    def test_scale_in_routes_through_drain_contract(self, monkeypatch):
+        """An eligible (empty) victim retires through the SAME
+        `_drain_dead_node` path as a failure, not a bare `alive` flip."""
+        sim, scaler = self._idle_cluster()
+        drained = []
+        orig = type(sim)._drain_dead_node
+
+        def spy(self, node_id, now):
+            drained.append(node_id)
+            return orig(self, node_id, now)
+
+        monkeypatch.setattr(type(sim), "_drain_dead_node", spy)
+        scaler._tick()
+        assert [e[1] for e in scaler.events].count("scale_in") == 1
+        dead = [nid for nid, n in sim.nodes.items() if not n.alive]
+        assert dead == drained  # retired exactly once, via the contract
+
+    def test_autoscaler_counts_reserved_kv_tokens(self):
+        """Regression: utilization ignored `reserved_kv_tokens`, so a burst
+        of admitted-but-unstarted work looked like an idle cluster exactly
+        when pressure was building. Reserved tokens alone must trip the
+        high watermark."""
+        sim, scaler = self._idle_cluster(n_decode=1)
+        st = next(n.state for n in sim.nodes.values() if n.role == "decode")
+        st.reserved_kv_tokens = int(0.9 * st.kv_capacity_tokens)
+        scaler._tick()
+        kinds = [e[1] for e in scaler.events]
+        assert "scale_out_requested" in kinds, (
+            "reserved (admitted-in-flight) KV never registered as pressure")
+
+    def test_tick_rearms_while_admissions_are_parked(self):
+        """Regression: the tick re-armed only `if sim._events`, so with an
+        empty heap and work parked in admission queues the autoscaler went
+        silent forever."""
+        from repro.core.runtime import Admission
+        sim, scaler = self._idle_cluster()
+        assert not sim._events
+        some_node = next(iter(sim._admission))
+        sim._admission[some_node].push(
+            Admission(7, 64, lambda nid: None, kind="arrival"))
+        # make every decoder ineligible for scale-in so the tick is a pure
+        # observation pass
+        for n in sim.nodes.values():
+            n.state.active_conversations = 1
+        scaler._tick()
+        assert sim._events, (
+            "autoscaler stopped ticking with conversations still parked")
+
     def test_autoscaler_adds_decoder_under_pressure(self):
         trace = generate_trace(80, 3.0, TraceConfig(seed=11, tool_mean_s=4.0))
         sched = make_scheduler("conserve")
