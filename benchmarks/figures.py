@@ -397,9 +397,23 @@ def prefix_reuse_bench():
     prefix_reuse.main(quick=True)
 
 
+def live_serving_bench():
+    """Async streaming gateway vs offline batch serving at equal load
+    (writes BENCH_live_serving.json at the repo root). Series:
+    `live_serving_engine` (two-scenario workload live through the gateway:
+    per-(cid, turn) stream byte-identity vs offline replay — also under one
+    injected decoder failure — p95 TTFET live vs offline, time-to-first-
+    streamed-token p50/p95), `live_serving_breaker` (circuit breaker sheds
+    new admissions at the queue watermark without crashing in-flight work)
+    and `live_serving_sim` (paper-scale mirror: turn-level stream counts +
+    the same latency deltas)."""
+    from . import live_serving
+    live_serving.main(quick=True)
+
+
 ALL = [fig01_trace_dist, fig02_prefill_curve, fig03_kv_transfer,
        fig04_tbt_heatmap, fig05_collocation, fig06_tbt_variance,
        fig07_powercap_prefill, fig08_powercap_decode, fig10_agentic_perf,
        fig11_cdfs, fig12_wrong_prediction, fig13_hetero, decode_tail_bench,
        prefill_path_bench, serve_overload_bench, fault_recovery_bench,
-       prefix_reuse_bench]
+       prefix_reuse_bench, live_serving_bench]

@@ -1,0 +1,236 @@
+"""Live-serving benchmark: the async streaming gateway vs the offline batch
+path at equal load, on both backends.
+
+A combined workload (two named scenarios from the library, disjoint cid
+ranges) is served twice per backend: once offline (`Runtime.serve`, every
+arrival pre-loaded) and once LIVE through `repro.serve.ServeGateway`
+(staged mid-flight submissions driven by an asyncio loop, per-token
+streaming off the event bus). The contract gated here:
+
+  * every live-streamed per-(cid, turn) token stream is BYTE-IDENTICAL to
+    the offline replay on the engine (turn-level counts on the sim) —
+    including with one replica failure injected mid-serve;
+  * p95 TTFET live vs offline at equal load (staged arrivals clamp to the
+    runtime's now, so the delta is the observable cost of liveness);
+  * time-to-first-streamed-token (logical first-token instant minus trace
+    arrival) p50/p95 — the latency a live subscriber actually sees;
+  * the circuit breaker sheds new admissions when every node's queue
+    exceeds the watermark WITHOUT crashing in-flight work.
+
+Writes BENCH_live_serving.json (BENCH_live_serving_quick.json under
+--quick) at the repo root; CI runs the quick variant and gates on
+completion + stream identity + a non-crashing shed.
+
+Usage: PYTHONPATH=src python -m benchmarks.live_serving [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .common import emit
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_live_serving.json"
+BENCH_QUICK_PATH = BENCH_PATH.with_name("BENCH_live_serving_quick.json")
+
+
+def _workload(n_convs: int, scale: str):
+    """Two scenarios from the library, disjoint cid ranges, interleaved in
+    arrival time — the CI smoke contract (staggered live arrivals from
+    more than one generator)."""
+    from repro.traces import make_scenario
+    half = n_convs // 2
+    a = make_scenario("shared_preamble_fleet", half, seed=2, scale=scale)
+    b = make_scenario("pareto_burst", n_convs - half, seed=7, scale=scale,
+                      cid_offset=1000, arrival_offset_s=0.05)
+    return a + b
+
+
+def _stream_latencies(gw, convs):
+    lat = [gw.first_token_t[c.cid] - c.arrival_s for c in convs
+           if c.cid in gw.first_token_t]
+    return {
+        "first_stream_token_p50_s": float(np.percentile(lat, 50)),
+        "first_stream_token_p95_s": float(np.percentile(lat, 95)),
+    }
+
+
+def _engine_live(n_convs: int):
+    import jax
+    from repro.configs import get_reduced
+    from repro.core import make_scheduler
+    from repro.core.metrics import summarize
+    from repro.engine import EngineServer, ReplicaEngine
+    from repro.models import build_model
+    from repro.serve import serve_scenario_live
+
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def mk(n_slots=8):
+        reps = [ReplicaEngine(cfg, params, n_slots=n_slots, max_ctx=1024,
+                              replica_id=0, role="prefill")] + [
+            ReplicaEngine(cfg, params, n_slots=n_slots, max_ctx=1024,
+                          replica_id=i, role="decode") for i in (1, 2)]
+        return EngineServer(make_scheduler("conserve"), reps,
+                            record_tokens=True, strict_accounting=True)
+
+    off_srv = mk()
+    off_recs = off_srv.serve(_workload(n_convs, "engine"))
+    offline_tokens = {k: list(v) for k, v in off_srv.sampled_tokens.items()}
+    off_s = summarize(off_recs)
+
+    convs = _workload(n_convs, "engine")
+    live_srv = mk()
+    recs, gw, client = serve_scenario_live(live_srv, convs)
+    live_s = summarize(recs)
+    identical = (gw.streams == offline_tokens
+                 and client.collected == offline_tokens)
+
+    # same live drive with a decoder dying mid-serve: deterministic replay
+    # must re-stream the interrupted turn byte-identically through the bus
+    fail_srv = mk().fail_replica(1, at_s=0.4)
+    frecs, fgw, fclient = serve_scenario_live(
+        fail_srv, _workload(n_convs, "engine"))
+    fail_identical = (fgw.streams == offline_tokens
+                      and fclient.collected == offline_tokens)
+
+    return {
+        "n_conversations": n_convs,
+        "complete_live": len(recs),
+        "complete_failure": len(frecs),
+        "streams_identical": bool(identical),
+        "streams_identical_under_failure": bool(fail_identical),
+        "n_recovered_under_failure": int(sum(
+            1 for r in frecs if r.recovered)),
+        "ttfet_p95_offline_s": off_s["ttfet_p95"],
+        "ttfet_p95_live_s": live_s["ttfet_p95"],
+        **_stream_latencies(gw, convs),
+        "events": dict(gw.events_seen),
+    }
+
+
+def _engine_breaker(n_convs: int):
+    """Flood a 2-slot mixed pair through the gateway with watermark 0:
+    submissions once both queues are deep must SHED (GatewayOverloaded),
+    and everything admitted still completes."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.core import make_scheduler
+    from repro.engine import EngineServer, ReplicaEngine
+    from repro.models import build_model
+    from repro.serve import GatewayOverloaded, ServeGateway
+    from repro.traces import make_scenario
+
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reps = [ReplicaEngine(cfg, params, n_slots=1, max_ctx=1024,
+                          replica_id=i, role="mixed") for i in (0, 1)]
+    srv = EngineServer(make_scheduler("conserve"), reps,
+                       record_tokens=True, strict_accounting=True)
+    burst = make_scenario("pareto_burst", n_convs, seed=9, scale="engine")
+    for c in burst:
+        c.arrival_s = 0.0
+    extra = make_scenario("pareto_burst", 4, seed=11, scale="engine",
+                          cid_offset=5000)
+
+    async def run():
+        gw = ServeGateway(srv, shed_watermark=0, max_events_per_tick=8)
+        gw.start()
+        gw.submit(burst)
+        shed = 0
+        # probe with one extra conversation per tick until the breaker
+        # fires (both single-slot queues go deep within a few ticks)
+        for _ in range(400):
+            await asyncio.sleep(0)
+            if not extra:
+                break
+            try:
+                gw.submit([extra[0]])
+                extra.pop(0)
+            except GatewayOverloaded:
+                shed += 1
+                break
+        recs = await gw.drain()
+        return gw, recs, shed
+
+    gw, recs, shed = asyncio.run(run())
+    srv.check_accounting()
+    return {
+        "n_burst": n_convs,
+        "n_shed": gw.n_shed,
+        "shed_raised": shed,
+        "complete": len(recs),
+        "all_admitted_complete": len(recs) == gw.n_submitted,
+    }
+
+
+def _sim_live(n_convs: int):
+    from repro.cluster import paper_deployment
+    from repro.core.metrics import summarize
+    from repro.serve import serve_scenario_live
+
+    off = paper_deployment("conserve")
+    off_recs = off.serve(_workload(n_convs, "paper"))
+    off_counts = {(r.cid, i): t.n_output_tokens
+                  for r in off_recs for i, t in enumerate(r.turns)}
+    off_s = summarize(off_recs)
+
+    convs = _workload(n_convs, "paper")
+    recs, gw, _ = serve_scenario_live(paper_deployment("conserve"), convs)
+    live_counts = {k: sum(v) for k, v in gw.streams.items()}
+    live_s = summarize(recs)
+    return {
+        "n_conversations": n_convs,
+        "complete_live": len(recs),
+        "turn_streams_identical": live_counts == off_counts,
+        "ttfet_p95_offline_s": off_s["ttfet_p95"],
+        "ttfet_p95_live_s": live_s["ttfet_p95"],
+        **_stream_latencies(gw, convs),
+        "events": dict(gw.events_seen),
+    }
+
+
+def main(quick: bool = False):
+    import jax
+
+    eng = _engine_live(n_convs=8 if quick else 16)
+    emit("live_serving_engine",
+         eng["ttfet_p95_live_s"] * 1e6,
+         f"complete={eng['complete_live']}/{eng['n_conversations']};"
+         f"identical={eng['streams_identical']};"
+         f"identical_failure={eng['streams_identical_under_failure']};"
+         f"ttfet_p95_off={eng['ttfet_p95_offline_s']:.3f}s;"
+         f"first_stream_p95={eng['first_stream_token_p95_s']:.3f}s")
+
+    brk = _engine_breaker(n_convs=8 if quick else 12)
+    emit("live_serving_breaker",
+         0.0,
+         f"shed={brk['n_shed']};"
+         f"admitted_complete={brk['all_admitted_complete']}")
+
+    sim = _sim_live(n_convs=12 if quick else 40)
+    emit("live_serving_sim",
+         sim["ttfet_p95_live_s"] * 1e6,
+         f"complete={sim['complete_live']}/{sim['n_conversations']};"
+         f"identical={sim['turn_streams_identical']};"
+         f"ttfet_p95_off={sim['ttfet_p95_offline_s']:.3f}s;"
+         f"first_stream_p95={sim['first_stream_token_p95_s']:.3f}s")
+
+    payload = {"backend": jax.default_backend(), "quick": quick,
+               "engine": eng, "breaker": brk, "simulator": sim}
+    (BENCH_QUICK_PATH if quick else BENCH_PATH).write_text(
+        json.dumps(payload, indent=1))
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(**vars(ap.parse_args()))

@@ -3,6 +3,12 @@ and compare all four systems (ConServe, AMPD, Collocated, Full Disagg) at the
 saturation operating point — a compact reproduction of Fig. 10/12.
 
     PYTHONPATH=src python examples/serve_trace.py [--n 250] [--rate paced]
+                                                  [--scenario NAME] [--seed S]
+
+--scenario swaps the classic paced trace for a named workload from the
+scenario library (pareto_burst, supervisor_worker, hitl_longpark,
+shared_preamble_fleet) at paper scale; 'classic' (default) keeps the
+original saturation-paced TraceConfig(seed=17) replay.
 """
 import argparse
 import sys
@@ -22,16 +28,26 @@ def main():
                     help="'paced' (saturation) or a conv/s float")
     ap.add_argument("--wrong", type=float, default=0.10,
                     help="AMPD wrong-prediction rate")
+    ap.add_argument("--scenario", default="classic",
+                    help="'classic' or a scenario-library name")
+    ap.add_argument("--seed", type=int, default=0, help="scenario seed")
     args = ap.parse_args()
 
-    if args.rate == "paced":
+    if args.scenario != "classic":
+        from repro.traces import make_scenario
+        trace = make_scenario(args.scenario, args.n, seed=args.seed,
+                              scale="paper")
+        workload = f"scenario={args.scenario} seed={args.seed}"
+    elif args.rate == "paced":
         trace = generate_trace(args.n, 1.634, TraceConfig(seed=17),
                                arrival_process="paced")
+        workload = "arrivals=paced"
     else:
         trace = generate_trace(args.n, float(args.rate), TraceConfig(seed=17))
+        workload = f"arrivals={args.rate}"
     total = sum(c.total_input_tokens + c.total_output_tokens for c in trace)
     print(f"trace: {args.n} conversations, {total/1e6:.1f}M tokens, "
-          f"arrivals={args.rate}")
+          f"{workload}")
 
     print(f"\n{'system':<13}{'TTFET g/p95 (s)':>20}{'lastTBT (ms)':>14}"
           f"{'E2E g (s)':>11}{'tok/J':>8}{'xfer/conv':>11}")

@@ -36,6 +36,8 @@ import itertools
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.conversation import Conversation, TurnView, view_of
+from repro.core.events import (EV_NODE_FAILURE, EV_RECOVERY, EV_TOKENS,
+                               EV_TURN_FINISH)
 from repro.core.metrics import ConversationRecord, TurnRecord
 from repro.core.runtime import (Admission, AdmissionQueue, DECODING, DONE,
                                 PREFILLING, PrefixKVPool, Runtime,
@@ -200,19 +202,38 @@ class ClusterSimulator(Runtime):
         heapq.heappush(self._events, (max(t, self.now), next(self._seq), fn))
 
     def run(self, until: Optional[float] = None):
-        while self._events:
-            t, _, fn = heapq.heappop(self._events)
-            if until is not None and t > until:
+        self.run_pending(until=until)
+        if until is None:
+            self.close()  # flushes idle energy, then rejects late submits
+        else:
+            for n in self.nodes.values():
+                n.integrate_energy(self.now, n.cost.tier.idle_w)
+        return self
+
+    def run_pending(self, max_events: Optional[int] = None,
+                    until: Optional[float] = None) -> int:
+        """Incremental drive (Runtime contract): pop up to `max_events`
+        pending events without closing, so staged submissions keep landing
+        between calls. An event past `until` stays in the heap."""
+        n = 0
+        while self._events and (max_events is None or n < max_events):
+            if until is not None and self._events[0][0] > until:
                 break
+            t, _, fn = heapq.heappop(self._events)
             self.now = t
             fn()
-        # flush idle energy to the end of the run
+            n += 1
+        return n
+
+    def close(self):
+        # flush idle energy to the end of the run before sealing the clock
         for n in self.nodes.values():
             n.integrate_energy(self.now, n.cost.tier.idle_w)
-        return self
+        super().close()
 
     # ----- workload entry -------------------------------------------------------
     def submit(self, convs: List[Conversation]):
+        self._assert_accepting()
         for c in convs:
             self._convs[c.cid] = c
             self.records[c.cid] = ConversationRecord(c.cid, c.arrival_s)
@@ -435,6 +456,15 @@ class ClusterSimulator(Runtime):
                          last_token_s=self.now,
                          n_output_tokens=turn.output_tokens)
         self._turn_recs[conv.cid].append(rec)
+        # the simulator emits at turn granularity (it owns token COUNTS,
+        # not token bytes): one tokens event per completed turn
+        self._publish(EV_TOKENS, self.now, cid=conv.cid,
+                      turn_idx=dj.turn_idx, node_id=node.node_id,
+                      n_tokens=turn.output_tokens,
+                      first_token_s=rec.first_token_s)
+        self._publish(EV_TURN_FINISH, self.now, cid=conv.cid,
+                      turn_idx=dj.turn_idx, node_id=node.node_id,
+                      n_output_tokens=turn.output_tokens)
         node.state.active_kv_tokens += turn.output_tokens
         if dj.turn_idx + 1 < conv.n_turns:
             self.sessions[conv.cid].transition(TOOL_WAIT, self.now)
@@ -642,6 +672,8 @@ class ClusterSimulator(Runtime):
         self.log.append(f"t={self.now:.1f} node {node_id} FAILED; "
                         f"recovering {len(victims)} in-flight conversations "
                         f"by replay (tool-waiting ones recover lazily)")
+        self._publish(EV_NODE_FAILURE, self.now, node_id=node_id,
+                      n_victims=len(victims))
         # a dead prefiller's queued jobs never ran: re-place each on a
         # healthy prefill-capable node (mid-flight jobs re-place from their
         # completion callback, which observes the death)
@@ -731,6 +763,10 @@ class ClusterSimulator(Runtime):
         trigger->resume latency to the record's `recovery_latency_s`."""
         self.records[conv.cid].recovered = True
         t0 = self.now
+        # the interrupted turn never emitted (the sim publishes at turn
+        # completion only), but subscribers tracking in-flight state still
+        # observe the rewind from the owned transition point
+        self._publish(EV_RECOVERY, self.now, cid=conv.cid, turn_idx=turn_idx)
         self.sessions[conv.cid].transition(PREFILLING, self.now, force=True)
         ctx = sum(t.append_tokens + t.output_tokens
                   for t in conv.turns[:turn_idx]) \

@@ -4,6 +4,9 @@ from .conserve import (ConServeRebalanceScheduler, ConServeScheduler,
                        ConServeSJFRefillScheduler)
 from .baselines import AMPDScheduler, CollocatedScheduler, FullDisaggScheduler
 from .signals import ClusterView, NodeState, PrefillLatencyCurve
+from .events import (EventBus, ServeEvent, EVENT_KINDS, EV_SESSION,
+                     EV_TOKENS, EV_TURN_FINISH, EV_ADMISSION_PARK,
+                     EV_ADMISSION_ADMIT, EV_NODE_FAILURE, EV_RECOVERY)
 from .runtime import (Admission, AdmissionQueue, Runtime, ServeSession,
                       SESSION_STATES, QUEUED, PREFILLING, TRANSFERRING,
                       DECODING, TOOL_WAIT, DONE)

@@ -55,6 +55,9 @@ from collections import deque
 from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
                     Tuple)
 
+from .events import (EV_ADMISSION_ADMIT, EV_ADMISSION_PARK, EV_SESSION,
+                     EventBus, ServeEvent)
+
 # ----- session states --------------------------------------------------------
 QUEUED = "QUEUED"              # submitted / waiting for admission
 PREFILLING = "PREFILLING"      # (append-)prefill running or enqueued
@@ -90,6 +93,12 @@ class ServeSession:
     node_id: Optional[int] = None  # current binding (decoder residency)
     turn_idx: int = 0
     history: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+    # observer hook fired from INSIDE transition() — the event bus reads the
+    # state machine at its own transition point, never a mirrored copy.
+    # Called as notify(session, prev_state, new_state, t) after the history
+    # entry lands; observers must not mutate the session.
+    notify: Optional[Callable[["ServeSession", str, str, float], None]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
 
     def __post_init__(self):
         if not self.history:
@@ -113,8 +122,11 @@ class ServeSession:
                 f"illegal session transition for cid {self.cid}: "
                 f"{self.state} -> {state} (allowed: "
                 f"{', '.join(_ALLOWED[self.state]) or 'none'})")
+        prev = self.state
         self.state = state
         self.history.append((state, max(t, self.history[-1][1])))
+        if self.notify is not None:
+            self.notify(self, prev, state, self.history[-1][1])
 
     def time_in(self, state: str, now: Optional[float] = None) -> float:
         """Total seconds spent in `state` over the session's closed history
@@ -419,16 +431,31 @@ class Runtime(abc.ABC):
     # how many admissions were ever deferred (parked) — a structural
     # backpressure signal independent of measured wall time
     n_deferred_admissions: int = 0
+    # lifecycle: False while the runtime accepts submissions (before and
+    # DURING the event loop — staged arrivals inject mid-flight); True once
+    # run() completed or close() was called, after which submit() raises
+    _closed: bool = False
 
     # ----- protocol ----------------------------------------------------------
     @abc.abstractmethod
     def submit(self, convs) -> "Runtime":
         """Register conversations (records + sessions) and schedule their
-        arrival events. Returns self for chaining."""
+        arrival events. Legal before and DURING the event loop (staged
+        arrival injection: an arrival timestamp already in the logical past
+        is clamped to now); raises once the runtime is closed. Returns self
+        for chaining."""
 
     @abc.abstractmethod
     def run(self) -> "Runtime":
-        """Drain the event loop. Returns self for chaining."""
+        """Drain the event loop, then CLOSE the runtime (late submissions
+        raise). Returns self for chaining."""
+
+    @abc.abstractmethod
+    def run_pending(self, max_events: Optional[int] = None) -> int:
+        """Incremental drive: pop up to `max_events` pending events (all of
+        them when None) WITHOUT closing the runtime, so staged submissions
+        may keep arriving between calls — the live gateway's drive loop.
+        Returns the number of events executed."""
 
     @abc.abstractmethod
     def results(self) -> list:
@@ -437,6 +464,61 @@ class Runtime(abc.ABC):
     def serve(self, convs) -> list:
         """The one-call contract: submit + run + results."""
         return self.submit(convs).run().results()
+
+    # ----- lifecycle ---------------------------------------------------------
+    @property
+    def runtime_state(self) -> str:
+        """"accepting" while submissions are legal, "closed" after."""
+        return "closed" if self._closed else "accepting"
+
+    def close(self):
+        """Finalize: no further submissions are accepted. run() calls this
+        after draining; a gateway calls it at drain time."""
+        self._closed = True
+
+    def _assert_accepting(self):
+        """Loud guard for every submit(): a submission after run() completed
+        would push arrival events onto a heap nothing drains — on the engine
+        backend that used to be SILENTLY inert (sessions registered, nothing
+        ever served). Name the runtime state instead."""
+        if self._closed:
+            raise RuntimeError(
+                f"late submission rejected: {type(self).__name__} runtime "
+                f"state is '{self.runtime_state}' — run() already completed "
+                f"(or close() was called) and drained the event loop, so "
+                f"the arrival would never execute. Submit before or during "
+                f"run(), or drive staged arrivals through run_pending() / "
+                f"repro.serve.ServeGateway.")
+
+    # ----- event bus ---------------------------------------------------------
+    @property
+    def bus(self) -> EventBus:
+        """The runtime's event bus, created on first access. Hot paths guard
+        with `_publish`, which never creates the bus — a runtime nobody
+        subscribed to pays one dict lookup per potential event."""
+        b = self.__dict__.get("_bus")
+        if b is None:
+            b = self.__dict__["_bus"] = EventBus()
+        return b
+
+    def _publish(self, event_kind: str, t: float, *,
+                 cid: Optional[int] = None, turn_idx: Optional[int] = None,
+                 node_id: Optional[int] = None, **data):
+        # first param deliberately not named "kind": admission events carry
+        # a "kind" payload key (the Admission.kind decision point) in **data
+        bus = self.__dict__.get("_bus")
+        if bus is not None and bus.wants(event_kind):
+            bus.publish(ServeEvent(kind=event_kind, t=t, cid=cid,
+                                   turn_idx=turn_idx, node_id=node_id,
+                                   data=data))
+
+    def _notify_session(self, sess: ServeSession, prev: str, state: str,
+                        t: float):
+        """ServeSession.notify target: republish the state machine's own
+        transition (the hook fires inside transition(), so `sess` IS the
+        owned state at that instant)."""
+        self._publish(EV_SESSION, t, cid=sess.cid, turn_idx=sess.turn_idx,
+                      node_id=sess.node_id, state=state, prev=prev)
 
     # ----- admission mechanism ----------------------------------------------
     @abc.abstractmethod
@@ -462,7 +544,8 @@ class Runtime(abc.ABC):
         interval, which is exactly the drift strict accounting rejects."""
 
     def _make_session(self, cid: int, arrival_s: float) -> ServeSession:
-        sess = ServeSession(cid=cid, arrival_s=arrival_s)
+        sess = ServeSession(cid=cid, arrival_s=arrival_s,
+                            notify=self._notify_session)
         self.sessions[cid] = sess
         return sess
 
@@ -517,10 +600,15 @@ class Runtime(abc.ABC):
         # time, not later from an unrelated conversation's release event
         fits = self._can_admit(node_id, adm)
         if len(q) == 0 and fits:
+            self._publish(EV_ADMISSION_ADMIT, now, cid=adm.cid,
+                          node_id=node_id, kind=adm.kind,
+                          need_tokens=adm.need_tokens)
             adm.ready(node_id)
             return True
         q.push(adm)
         self.view.node(node_id).queued_conversations += 1
+        self._publish(EV_ADMISSION_PARK, now, cid=adm.cid, node_id=node_id,
+                      kind=adm.kind, need_tokens=adm.need_tokens)
         # structural backpressure count (independent of measured timings);
         # an admission re-parked by a reoffer move does not count twice
         if not adm.deferred:
@@ -570,6 +658,9 @@ class Runtime(abc.ABC):
                 break
             q.remove(cid)
             st.queued_conversations -= 1
+            self._publish(EV_ADMISSION_ADMIT, now, cid=adm.cid,
+                          node_id=node_id, kind=adm.kind,
+                          need_tokens=adm.need_tokens)
             adm.ready(node_id)
 
     # ----- shared observables -----------------------------------------------

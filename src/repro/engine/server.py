@@ -58,6 +58,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.conversation import Conversation, TurnView, view_of
+from repro.core.events import (EV_NODE_FAILURE, EV_RECOVERY, EV_TOKENS,
+                               EV_TURN_FINISH)
 from repro.core.metrics import ConversationRecord, TurnRecord
 from repro.core.runtime import (Admission, AdmissionQueue,
                                 ConversationJournal, DECODING, DONE,
@@ -312,19 +314,32 @@ class EngineServer(Runtime):
 
     # ----- Runtime protocol --------------------------------------------------------
     def submit(self, convs: List[Conversation]) -> "EngineServer":
+        self._assert_accepting()
         for c in convs:
             self._convs[c.cid] = c
             self.records[c.cid] = ConversationRecord(c.cid, c.arrival_s)
             self._make_session(c.cid, c.arrival_s)
-            self._push(c.arrival_s, lambda c=c: self._arrive(c))
+            # staged arrival injection: a submission landing after logical
+            # time passed its arrival stamp executes at now (the logical
+            # clock must never run backwards); the session keeps the trace's
+            # arrival_s, so the gap is measured as queue wait, not erased
+            self._push(max(c.arrival_s, self._now),
+                       lambda c=c: self._arrive(c))
         return self
 
     def run(self) -> "EngineServer":
-        while self._events:
+        self.run_pending()
+        self.close()
+        return self
+
+    def run_pending(self, max_events: Optional[int] = None) -> int:
+        n = 0
+        while self._events and (max_events is None or n < max_events):
             t, _, fn = heapq.heappop(self._events)
             self._now = t
             fn()
-        return self
+            n += 1
+        return n
 
     def results(self) -> List[ConversationRecord]:
         return [r for r in self.records.values() if r.turns]
@@ -579,6 +594,11 @@ class EngineServer(Runtime):
             # alias the task's live stream: a failure rewind rebuilds the
             # task, so the dict always points at the CURRENT attempt's tokens
             self.sampled_tokens[(conv.cid, turn_idx)] = task.stream
+        # the turn's opening token (the prefill argmax, stream[0]) exists
+        # the moment the task stages — publish it from here so subscribers
+        # concatenating `tokens` payloads reproduce task.stream exactly
+        self._publish(EV_TOKENS, ready_t, cid=conv.cid, turn_idx=turn_idx,
+                      node_id=node_id, tokens=[next_tok], per_token_s=0.0)
         if self.rotation:
             self._ready[node_id].append((ready_t, next(self._seq), task))
             self._kick(node_id, ready_t)
@@ -733,7 +753,14 @@ class EngineServer(Runtime):
                 task.first_token_t = start + per_tok
             task.remaining -= took
             task.next_token = int(seq[took - 1, slot])
-            task.stream.extend(int(t) for t in seq[:took, slot])
+            new_toks = [int(t) for t in seq[:took, slot]]
+            task.stream.extend(new_toks)
+            # per-token emission out of the chunk that just ran: the tokens
+            # and their interpolated timestamps are the same values the
+            # stream/finish bookkeeping above already owns
+            self._publish(EV_TOKENS, start + per_tok, cid=task.conv.cid,
+                          turn_idx=task.turn_idx, node_id=node_id,
+                          tokens=new_toks, per_token_s=per_tok)
             st.active_kv_tokens += took
             if task.remaining <= 0:
                 # mid-chunk finish: this turn's last token landed at step
@@ -768,6 +795,9 @@ class EngineServer(Runtime):
         turn = conv.turns[idx]
         sess = self.sessions[conv.cid]
         self.journal.record(conv.cid, idx, task.stream)
+        self._publish(EV_TURN_FINISH, t, cid=conv.cid, turn_idx=idx,
+                      node_id=self._slots[conv.cid][0],
+                      n_output_tokens=turn.output_tokens)
         self.records[conv.cid].turns.append(TurnRecord(
             turn_idx=idx, arrival_s=task.arrival_t,
             first_token_s=task.first_token_t, last_token_s=t,
@@ -936,6 +966,8 @@ class EngineServer(Runtime):
             f"t={self._now:.3f} replica {node_id} FAILED; replaying "
             f"{len(victims)} in-flight conversations on healthy replicas "
             f"(tool-waiting ones recover lazily)")
+        self._publish(EV_NODE_FAILURE, self._now, node_id=node_id,
+                      n_victims=len(victims))
         # parked admissions would never be pumped: re-place each through the
         # SAME decision point that placed it (shared Runtime mechanism —
         # raises loudly if no healthy target exists)
@@ -954,6 +986,11 @@ class EngineServer(Runtime):
         `replayed_prefill_tokens`, never to the victim's turn records."""
         cid = conv.cid
         self._gen[cid] = self._gen.get(cid, 0) + 1
+        # the interrupted turn's already-published tokens are now stale;
+        # this must publish BEFORE the replay path can emit the replacement
+        # argmax token, so subscribers reset their (cid, turn_idx)
+        # accumulation and the replay re-streams it byte-identically
+        self._publish(EV_RECOVERY, self._now, cid=cid, turn_idx=turn_idx)
         self._slots.pop(cid, None)
         rec = self.records[cid]
         rec.recovered = True

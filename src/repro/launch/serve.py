@@ -14,14 +14,30 @@ scales apart.
 
   python -m repro.launch.serve --arch qwen3-0.6b [--multi-pod]
                                [--engine | --sim] [--slots N]
+                               [--gateway] [--scenario NAME] [--seed S]
+
+--scenario picks a named workload from the scenario library
+(`repro.traces.SCENARIOS`); --gateway serves it LIVE through the async
+streaming gateway (staged arrivals, per-token event bus) instead of the
+offline submit+run batch path — same runtime, same records, plus live
+streaming observables.
 """
 import argparse
 
 
-def _drive(runtime, trace):
-    """The whole serving contract, backend-agnostic."""
+def _drive(runtime, trace, gateway: bool = False):
+    """The whole serving contract, backend-agnostic. With `gateway`, the
+    trace is injected live through `repro.serve` (staged arrivals driven by
+    an asyncio loop) rather than submitted as one offline batch."""
     from repro.core.metrics import summarize
-    recs = runtime.serve(trace)
+    if gateway:
+        from repro.serve import serve_scenario_live
+        recs, gw, _ = serve_scenario_live(runtime, trace)
+        h = gw.health()
+        print(f"  gateway: {h['n_submitted']} submitted, {h['n_done']} done, "
+              f"{h['n_shed']} shed; events: {h['events_seen']}")
+    else:
+        recs = runtime.serve(trace)
     s = summarize(recs)
     for k in ("ttfet_gmean", "ttfet_p95", "last_tbt_gmean", "e2e_gmean",
               "kv_transfers_per_conv"):
@@ -56,6 +72,17 @@ def main():
                          "'jit' = AOT-compiled donated bucket programs "
                          "(replica default), 'reference' = the eager "
                          "per-op oracle — the before/after comparison knob")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve LIVE through the async streaming gateway "
+                         "(staged arrivals + per-token event bus) instead "
+                         "of the offline batch path")
+    ap.add_argument("--scenario", default=None,
+                    help="named workload from the scenario library "
+                         "(pareto_burst, supervisor_worker, hitl_longpark, "
+                         "shared_preamble_fleet); default: the classic "
+                         "generate_trace workload")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="scenario seed (byte-identical trace per seed)")
     args = ap.parse_args()
 
     if args.engine:
@@ -76,12 +103,17 @@ def main():
         srv = EngineServer(make_scheduler(args.scheduler), reps,
                            rotation=not args.no_rotation,
                            prefill_mode=args.prefill_mode)
-        tc = TraceConfig(first_input_median=150, first_input_max=500,
-                         append_median=24, append_max=64, output_median=10,
-                         output_max=32, mean_turns=3.0, max_turns=6,
-                         tool_mean_s=0.05)
-        trace = generate_trace(args.n_conversations, 2.0, cfg=tc)
-        _drive(srv, trace)
+        if args.scenario:
+            from repro.traces import make_scenario
+            trace = make_scenario(args.scenario, args.n_conversations,
+                                  seed=args.seed, scale="engine")
+        else:
+            tc = TraceConfig(first_input_median=150, first_input_max=500,
+                             append_median=24, append_max=64,
+                             output_median=10, output_max=32, mean_turns=3.0,
+                             max_turns=6, tool_mean_s=0.05)
+            trace = generate_trace(args.n_conversations, 2.0, cfg=tc)
+        _drive(srv, trace, gateway=args.gateway)
         return
 
     if args.sim:
@@ -89,9 +121,14 @@ def main():
         from repro.traces import TraceConfig, generate_trace
 
         sim = paper_deployment(args.scheduler)
-        trace = generate_trace(args.n_conversations, 1.634,
-                               TraceConfig(seed=17))
-        _drive(sim, trace)
+        if args.scenario:
+            from repro.traces import make_scenario
+            trace = make_scenario(args.scenario, args.n_conversations,
+                                  seed=args.seed, scale="paper")
+        else:
+            trace = generate_trace(args.n_conversations, 1.634,
+                                   TraceConfig(seed=17))
+        _drive(sim, trace, gateway=args.gateway)
         return
 
     import os

@@ -1,0 +1,232 @@
+"""Live gateway e2e: the async streaming front end must be a pure OBSERVER —
+live staged submission through `ServeGateway` streams byte-identically to an
+offline `Runtime.serve()` replay of the same trace on both backends (engine:
+token ids, incl. under an injected replica failure; sim: per-turn counts),
+the circuit breaker refuses without crashing, and late submission after
+run() is a loud error naming the runtime state on both backends."""
+import asyncio
+
+import jax
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import make_scheduler
+from repro.core.events import (EV_ADMISSION_ADMIT, EV_ADMISSION_PARK,
+                               EV_SESSION)
+from repro.engine import EngineServer, ReplicaEngine
+from repro.models import build_model
+from repro.serve import (GatewayClient, GatewayOverloaded, ServeGateway,
+                         serve_scenario_live)
+from repro.traces import make_scenario
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(qwen, n_slots=8, roles=("prefill", "decode", "decode")):
+    cfg, _, params = qwen
+    reps = [ReplicaEngine(cfg, params, n_slots=n_slots, max_ctx=1024,
+                          replica_id=i, role=r)
+            for i, r in enumerate(roles)]
+    return EngineServer(make_scheduler("conserve"), reps,
+                        record_tokens=True, strict_accounting=True)
+
+
+def _trace(seed=2, n=5):
+    return make_scenario("shared_preamble_fleet", n, seed=seed,
+                         scale="engine")
+
+
+# --------------------------------------------------------------------------- #
+# engine: live stream byte-identity vs offline replay
+# --------------------------------------------------------------------------- #
+def test_engine_gateway_streams_byte_identical(qwen):
+    off = _engine(qwen)
+    off.serve(_trace())
+    offline = {k: list(v) for k, v in off.sampled_tokens.items()}
+
+    live = _engine(qwen)
+    recs, gw, client = serve_scenario_live(live, _trace())
+    assert len(recs) == 5
+    # the gateway's accumulation IS the engine's own stream state...
+    assert gw.streams == live.sampled_tokens
+    # ...and live staged arrival changes nothing about token content
+    assert gw.streams == offline
+    assert client.collected == offline
+    live.check_accounting()
+    # health reads the same NodeState observables schedulers see
+    h = gw.health()
+    assert h["runtime_state"] == "closed" and h["n_done"] == 5
+    for st in h["nodes"].values():
+        assert {"kv_headroom_tokens", "queued_conversations",
+                "masked_forward_fraction"} <= set(st)
+
+
+def test_engine_gateway_identical_under_replica_failure(qwen):
+    off = _engine(qwen)
+    off.serve(_trace())
+    offline = {k: list(v) for k, v in off.sampled_tokens.items()}
+
+    live = _engine(qwen).fail_replica(1, at_s=0.4)
+    recs, gw, client = serve_scenario_live(live, _trace())
+    assert len(recs) == 5
+    assert any(r.recovered for r in recs), "failure missed every conv"
+    # the recovery event rewound the interrupted turn's accumulation and
+    # deterministic replay re-streamed it — byte-identical end state
+    assert gw.streams == offline
+    assert client.collected == offline
+    assert sum(client.rewinds.values()) >= 1
+    assert gw.events_seen["node_failure"] == 1
+    assert gw.events_seen["recovery"] >= 1
+    live.check_accounting()
+
+
+# --------------------------------------------------------------------------- #
+# simulator: live turn-level stream identity vs offline replay
+# --------------------------------------------------------------------------- #
+def test_sim_gateway_turn_streams_identical():
+    from repro.cluster import paper_deployment
+
+    convs = make_scenario("pareto_burst", 10, seed=5, scale="paper")
+    off = paper_deployment("conserve").serve(convs)
+    off_counts = {(r.cid, i): t.n_output_tokens
+                  for r in off for i, t in enumerate(r.turns)}
+
+    live_convs = make_scenario("pareto_burst", 10, seed=5, scale="paper")
+    recs, gw, _ = serve_scenario_live(paper_deployment("conserve"),
+                                      live_convs)
+    assert len(recs) == 10
+    assert {k: sum(v) for k, v in gw.streams.items()} == off_counts
+    # first streamed token observed for every conversation, after arrival
+    for c in live_convs:
+        assert gw.first_token_t[c.cid] >= c.arrival_s
+
+
+def test_sim_gateway_identical_under_node_failure():
+    from repro.cluster import paper_deployment
+
+    convs = make_scenario("pareto_burst", 10, seed=5, scale="paper")
+    off = paper_deployment("conserve").serve(convs)
+    off_counts = {(r.cid, i): t.n_output_tokens
+                  for r in off for i, t in enumerate(r.turns)}
+
+    sim = paper_deployment("conserve")
+    sim.inject_failure(node_id=1, at_s=15.0)
+    recs, gw, _ = serve_scenario_live(
+        sim, make_scenario("pareto_burst", 10, seed=5, scale="paper"))
+    assert len(recs) == 10
+    assert {k: sum(v) for k, v in gw.streams.items()} == off_counts
+    assert gw.events_seen["node_failure"] == 1
+
+
+# --------------------------------------------------------------------------- #
+# circuit breaker: overload refuses new work, never crashes admitted work
+# --------------------------------------------------------------------------- #
+def test_circuit_breaker_sheds_without_crashing(qwen):
+    srv = _engine(qwen, n_slots=1, roles=("mixed", "mixed"))
+    burst = make_scenario("pareto_burst", 8, seed=9, scale="engine")
+    for c in burst:
+        c.arrival_s = 0.0
+    extra = make_scenario("pareto_burst", 4, seed=11, scale="engine",
+                          cid_offset=100)
+
+    async def run():
+        gw = ServeGateway(srv, shed_watermark=0, max_events_per_tick=8)
+        gw.start()
+        gw.submit(burst)
+        shed = False
+        for _ in range(400):
+            await asyncio.sleep(0)
+            try:
+                gw.submit([extra[0]])
+                extra.pop(0)
+            except GatewayOverloaded as e:
+                assert "watermark" in str(e) and "depths" in str(e)
+                shed = True
+                break
+            if not extra:
+                break
+        recs = await gw.drain()
+        return gw, recs, shed
+
+    gw, recs, shed = asyncio.run(run())
+    assert shed and gw.n_shed >= 1
+    # every ADMITTED conversation still completed — refusal, not a crash
+    assert len(recs) == gw.n_submitted
+    srv.check_accounting()
+
+
+# --------------------------------------------------------------------------- #
+# lifecycle: late submission is a loud error on BOTH backends
+# --------------------------------------------------------------------------- #
+def test_late_submit_raises_loudly_engine(qwen):
+    srv = _engine(qwen)
+    srv.serve(_trace(n=2))
+    with pytest.raises(RuntimeError, match="closed") as ei:
+        srv.submit(_trace(seed=3, n=1))
+    assert "EngineServer" in str(ei.value)
+    assert "run_pending" in str(ei.value)  # names the live alternative
+
+
+def test_late_submit_raises_loudly_sim():
+    from repro.cluster import paper_deployment
+
+    sim = paper_deployment("conserve")
+    sim.serve(make_scenario("pareto_burst", 3, seed=1, scale="paper"))
+    with pytest.raises(RuntimeError, match="closed") as ei:
+        sim.submit(make_scenario("pareto_burst", 1, seed=2, scale="paper"))
+    assert "ClusterSimulator" in str(ei.value)
+
+
+def test_gateway_rejects_submit_after_drain(qwen):
+    srv = _engine(qwen)
+
+    async def run():
+        gw = ServeGateway(srv)
+        gw.start()
+        gw.submit(_trace(n=2))
+        await gw.drain()
+        with pytest.raises(RuntimeError, match="draining"):
+            gw.submit(_trace(seed=3, n=1))
+
+    asyncio.run(run())
+
+
+# --------------------------------------------------------------------------- #
+# event bus: admission park/admit and session transitions are observable
+# --------------------------------------------------------------------------- #
+def test_event_bus_observes_admission_and_sessions(qwen):
+    srv = _engine(qwen, n_slots=1, roles=("mixed", "mixed"))
+    seen = {"park": 0, "admit": 0, "session": []}
+    srv.bus.subscribe(lambda ev: seen.__setitem__("park", seen["park"] + 1),
+                      kinds=[EV_ADMISSION_PARK])
+    srv.bus.subscribe(lambda ev: seen.__setitem__("admit", seen["admit"] + 1),
+                      kinds=[EV_ADMISSION_ADMIT])
+    srv.bus.subscribe(
+        lambda ev: seen["session"].append((ev.cid, ev.data["prev"],
+                                           ev.data["state"])),
+        kinds=[EV_SESSION])
+    burst = _trace(n=5)
+    for c in burst:
+        c.arrival_s = 0.0
+    recs = srv.serve(burst)
+    assert len(recs) == 5
+    # 5 convs on 2 single-slot nodes: some MUST park, all eventually admit
+    assert seen["park"] >= 1
+    assert seen["admit"] >= seen["park"]
+    dones = [s for s in seen["session"] if s[2] == "DONE"]
+    assert len(dones) == 5
+    # bus state mirrors the session machine, not a second bookkeeping path
+    for cid, sess in srv.sessions.items():
+        assert sess.done
+
+
+def test_event_bus_rejects_unknown_kind(qwen):
+    srv = _engine(qwen)
+    with pytest.raises(ValueError, match="unknown event kind"):
+        srv.bus.subscribe(lambda ev: None, kinds=["tokenz"])

@@ -1,0 +1,86 @@
+"""Scenario-library contract: every named generator is a pure function of
+(name, n, seed, scale) — byte-identical Conversation lists per seed — and
+each scenario's structural invariant holds (DAG gating, HITL parks, shared
+preambles, engine-scale context bound)."""
+import pytest
+
+from repro.core.conversation import Conversation
+from repro.traces import (SCENARIOS, make_scenario, supervisor_worker_dag,
+                          workload_stats)
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+@pytest.mark.parametrize("scale", ["paper", "engine"])
+def test_seed_determinism_byte_identical(name, scale):
+    a = make_scenario(name, 14, seed=5, scale=scale)
+    b = make_scenario(name, 14, seed=5, scale=scale)
+    assert a == b  # plain dataclasses: field-for-field identity
+    assert len(a) == 14
+    assert all(isinstance(c, Conversation) for c in a)
+    # a different seed must actually change the workload
+    assert make_scenario(name, 14, seed=6, scale=scale) != a
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_engine_scale_fits_test_replicas(name):
+    """Engine-scale scenarios must serve on the max_ctx=1024 replicas the
+    tests and CI smoke use — peak context bounded."""
+    convs = make_scenario(name, 20, seed=1, scale="engine")
+    assert max(c.peak_context_tokens() for c in convs) <= 1024
+    s = workload_stats(convs)
+    assert s.mean_first_input > 0 and s.mean_peak_kv_tokens <= 1024
+
+
+def test_workload_stats_sane_paper_scale():
+    convs = make_scenario("pareto_burst", 30, seed=3, scale="paper")
+    s = workload_stats(convs)
+    # the §3 regime: first inputs dominate (tens of k), decoder volume O(1k)
+    assert s.mean_first_input > 5_000
+    assert 0 < s.mean_decoder_volume < s.mean_first_input
+
+
+def test_supervisor_worker_dag_gating_invariant():
+    """A child dispatched from parent turn g can never be ready before the
+    parent's cumulative tool time through g has elapsed."""
+    convs, edges = supervisor_worker_dag(24, seed=9, scale="paper")
+    assert edges, "DAG scenario generated no supervisor->worker edges"
+    by = {c.cid: c for c in convs}
+    for parent_cid, gate_turn, child_cid in edges:
+        parent, child = by[parent_cid], by[child_cid]
+        assert 0 <= gate_turn < parent.n_turns
+        cum_tool = sum(t.tool_time_s
+                       for t in parent.turns[:gate_turn + 1])
+        assert child.arrival_s >= parent.arrival_s + cum_tool
+
+
+def test_hitl_longpark_has_long_parks():
+    convs = make_scenario("hitl_longpark", 40, seed=2, scale="paper")
+    base = make_scenario("pareto_burst", 40, seed=2, scale="paper")
+    longest = max(t.tool_time_s for c in convs for t in c.turns)
+    assert longest > 10 * max(t.tool_time_s for c in base for t in c.turns)
+
+
+def test_shared_preamble_fleet_shares_identities():
+    convs = make_scenario("shared_preamble_fleet", 40, seed=4,
+                          scale="paper", n_preambles=3)
+    ids = [c.preamble_id for c in convs if c.preamble_id is not None]
+    assert len(ids) >= 20          # preamble_share=0.8 of 40
+    assert 1 < len(set(ids)) <= 3  # distinct shared identities
+    assert all(0 < c.preamble_tokens < c.first_input_len
+               for c in convs if c.preamble_id is not None)
+
+
+def test_unknown_scenario_and_scale_raise():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        make_scenario("definitely_not_a_scenario", 4)
+    with pytest.raises(ValueError, match="unknown scale"):
+        make_scenario("pareto_burst", 4, scale="galactic")
+
+
+def test_offsets_combine_without_collision():
+    a = make_scenario("pareto_burst", 6, seed=1, scale="engine")
+    b = make_scenario("hitl_longpark", 6, seed=1, scale="engine",
+                      cid_offset=100, arrival_offset_s=5.0)
+    cids = [c.cid for c in a + b]
+    assert len(set(cids)) == len(cids)
+    assert min(c.arrival_s for c in b) >= 5.0
