@@ -1,0 +1,288 @@
+"""Chaos soak benchmark: a seeded, byte-identical fault schedule — one
+kill -> rejoin cycle, one sustained slowdown that must trip the
+observed-straggler quarantine (and recover out of it), one KV-transfer
+fault and one tool timeout — applied mid-flight to a live gateway-driven
+multi-scenario workload on BOTH backends.
+
+The gate is the full chaos contract from `repro.chaos.check_chaos_invariants`:
+
+  * every submitted conversation COMPLETES;
+  * every per-(cid, turn) stream is BYTE-IDENTICAL to the fault-free
+    offline replay (token ids on the engine, per-turn counts on the sim)
+    under `strict_accounting=True`;
+  * ZERO placements land on dead or quarantined nodes (asserted inline by
+    the `PlacementMonitor` at every admission event);
+  * the killed node rejoins from dead, the slowed node is quarantined
+    PURELY from its observed TBT EMA vs the fleet median, rejoins when the
+    observation recovers, and serves again (a held-back conversation wave
+    submits at the observed rejoin, landing on the cold node).
+
+Reported metrics: node recovery latency p50/p95 (failure -> from_dead
+join), replayed-token fraction (replayed prefill work over all prefill
+work), and decoder-availability fraction (per-node alive AND ACTIVE time
+integrated from the observed lifecycle log).
+
+Writes BENCH_chaos_soak.json (BENCH_chaos_soak_quick.json under --quick)
+at the repo root; CI runs the quick variant and fails unless completion +
+stream identity + zero bad placements + the quarantine round-trip hold on
+both backends.
+
+Usage: PYTHONPATH=src python -m benchmarks.chaos_soak [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .common import emit
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_chaos_soak.json"
+BENCH_QUICK_PATH = BENCH_PATH.with_name("BENCH_chaos_soak_quick.json")
+
+# schedule shapes: the kill -> rejoin cycle completes BEFORE the slowdown
+# window opens, so the fleet never has the straggler and the corpse out of
+# service at once, and the slowdown lifts while the quarantined node still
+# holds observable tails (the EMA needs ~12 observed chunks to decay back
+# under the rejoin threshold). The ranges differ per backend because the
+# backends' activity profiles differ: the simulator serves continuously
+# across its span, while the engine's logical span is dominated by the
+# inflated tool wait — its decode activity is an early burst plus the
+# watchdog-replay tail — so the engine cycle runs earlier and its slowdown
+# window is much wider to guarantee overlap with observed chunks.
+_SIM_SCHED_KW = dict(
+    kill_frac_range=(0.06, 0.12),
+    rejoin_delay_frac_range=(0.08, 0.14),
+    slowdown_start_range=(0.28, 0.36),
+    slowdown_len_range=(0.18, 0.28),
+    slowdown_factor_range=(8.0, 12.0),
+    transfer_frac_range=(0.15, 0.55),
+)
+_ENGINE_SCHED_KW = dict(
+    kill_frac_range=(0.03, 0.05),
+    rejoin_delay_frac_range=(0.04, 0.07),
+    slowdown_start_range=(0.02, 0.04),
+    slowdown_len_range=(0.38, 0.45),
+    slowdown_factor_range=(5.5, 6.5),
+    transfer_frac_range=(0.15, 0.55),
+)
+_QUARANTINE_KW = dict(quarantine_k=3.0, quarantine_window=2)
+
+
+def _workload(n_convs: int, scale: str):
+    """First wave: two scenarios from the library, disjoint cid ranges,
+    interleaved arrivals (the soak acceptance requires >= 2 scenarios)."""
+    from repro.traces import make_scenario
+    half = n_convs // 2
+    a = make_scenario("shared_preamble_fleet", half, seed=2, scale=scale)
+    b = make_scenario("pareto_burst", n_convs - half, seed=7, scale=scale,
+                      cid_offset=1000, arrival_offset_s=0.05)
+    return a + b
+
+
+def _engine_first_wave(n_convs: int):
+    """Engine first wave: three scenario slices with staggered LOGICAL
+    arrivals (0 / 0.3 / 0.6 s). Engine decode drains a slice in ~0.3 s of
+    logical time, so the stagger keeps decoders continuously busy across
+    most of the span — the slowdown window is guaranteed to overlap
+    observed chunks, and the slice landing after the rejoin re-warms the
+    revived node's EMA (a cold node is exactly what min-KV binding
+    prefers), restoring the fleet-median baseline the quarantine trigger
+    compares against."""
+    from repro.traces import make_scenario
+    quarter = n_convs // 4
+    # slice A is pareto_burst ON PURPOSE: its per-conversation KV is
+    # balanced, so min-KV binding alternates decoders evenly and the
+    # slowdown victim owns enough resident work to keep producing the
+    # chunk observations the rejoin rule feeds on (a shared-preamble slice
+    # here skews binding away from whichever node imports the preamble
+    # first)
+    a = make_scenario("pareto_burst", n_convs - 2 * quarter, seed=2,
+                      scale="engine")
+    b = make_scenario("shared_preamble_fleet", quarter, seed=7,
+                      scale="engine", cid_offset=1000, arrival_offset_s=0.3)
+    c = make_scenario("supervisor_worker", quarter, seed=11,
+                      scale="engine", cid_offset=2000, arrival_offset_s=0.6)
+    return a + b + c
+
+
+def _wave(n_convs: int, scale: str, cid_offset: int, seed: int):
+    from repro.traces import make_scenario
+    return make_scenario("pareto_burst", n_convs, seed=seed, scale=scale,
+                         cid_offset=cid_offset)
+
+
+def _metrics(runtime, monitor, records, convs, decode_ids):
+    rec_lat = monitor.recovery_latencies()
+    conv_lat = [l for r in records for l in r.recovery_latency_s]
+    avail = monitor.availability_timeline(decode_ids, 0.0, runtime.now_s)
+    total_in = sum(t.append_tokens for c in convs for t in c.turns)
+    replayed = sum(st.replayed_prefill_tokens
+                   for st in runtime.view._nodes.values())
+    return {
+        "node_recovery_latency_p50_s": float(np.percentile(rec_lat, 50))
+        if rec_lat else 0.0,
+        "node_recovery_latency_p95_s": float(np.percentile(rec_lat, 95))
+        if rec_lat else 0.0,
+        "conv_recovery_latency_p95_s": float(np.percentile(conv_lat, 95))
+        if conv_lat else 0.0,
+        "replayed_prefill_tokens": int(replayed),
+        "replayed_token_fraction": replayed / max(replayed + total_in, 1),
+        "decoder_availability_fraction": float(np.mean(list(avail.values()))),
+        "decoder_availability_by_node": {
+            int(k): round(v, 4) for k, v in avail.items()},
+    }
+
+
+def _engine_chaos(n_convs: int, seed: int):
+    import jax
+    from repro.chaos import (apply_tool_timeouts, arm_schedule,
+                             check_chaos_invariants,
+                             generate_chaos_schedule, run_chaos)
+    from repro.configs import get_reduced
+    from repro.core import make_scheduler
+    from repro.engine import EngineServer, ReplicaEngine
+    from repro.models import build_model
+
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # >> engine-scale tool_mean_s=0.05, but small enough that the victim's
+    # inflated wait (3x deadline) doesn't swallow the span in dead air — a
+    # few extra honest evictions on the exp(0.05) tail are fine, the
+    # watchdog replay path preserves stream identity by construction
+    deadline = 0.12
+
+    def mk(**kw):
+        # max_decode_chunk=4 densifies the chunk observations the
+        # quarantine trigger consumes (chunking never changes tokens)
+        reps = [ReplicaEngine(cfg, params, n_slots=8, max_ctx=1024,
+                              replica_id=0, role="prefill")] + [
+            ReplicaEngine(cfg, params, n_slots=8, max_ctx=1024,
+                          replica_id=i, role="decode") for i in (1, 2)]
+        return EngineServer(make_scheduler("conserve"), reps,
+                            record_tokens=True, strict_accounting=True,
+                            max_decode_chunk=4, rotation_min_chunk=4, **kw)
+
+    # fault ordering keeps a live ACTIVE decoder at every instant of the
+    # two-decoder run: the slowdown victim stays ACTIVE (merely slow) until
+    # its EMA trips, which takes long enough that the killed peer has
+    # already rejoined by then
+    schedule = generate_chaos_schedule(seed, [1, 2], **_ENGINE_SCHED_KW)
+    first = apply_tool_timeouts(_engine_first_wave(n_convs), schedule,
+                                deadline)
+    w2 = _wave(max(2, n_convs // 4), "engine", 9000, 13)
+    w3 = _wave(max(2, n_convs // 4), "engine", 9500, 17)
+    everyone = first + w2 + w3
+
+    base = mk()
+    base_recs = base.serve(everyone)
+    span = max(t.last_token_s for r in base_recs for t in r.turns)
+    baseline_streams = {k: list(v) for k, v in base.sampled_tokens.items()}
+
+    srv = mk(tool_deadline_s=deadline, tool_timeout_action="evict",
+             **_QUARANTINE_KW)
+    arm_schedule(srv, schedule, span)
+    # submit the whole first wave in one batch: its staggered LOGICAL
+    # arrivals then land on the heap deterministically instead of being
+    # clamped to wherever the wall-clock drive loop happens to be
+    res = run_chaos(srv, first, schedule, span, second_wave=w2,
+                    quarantine_wave=w3, stagger=len(first))
+    evidence = check_chaos_invariants(res.records, res.gateway, res.monitor,
+                                      schedule, everyone, baseline_streams)
+    srv.check_accounting()
+    return {
+        "n_conversations": len(everyone),
+        "schedule_digest": schedule.digest,
+        "baseline_span_s": round(span, 4),
+        "all_complete": len(res.records) == len(everyone),
+        "streams_identical": True,  # check_chaos_invariants raised otherwise
+        "zero_bad_placements": not res.monitor.violations,
+        "evidence": evidence,
+        **_metrics(srv, res.monitor, res.records, everyone, [1, 2]),
+    }
+
+
+def _sim_chaos(n_convs: int, seed: int):
+    from repro.chaos import (apply_tool_timeouts, arm_schedule,
+                             check_chaos_invariants,
+                             generate_chaos_schedule, run_chaos)
+    from repro.cluster.deployment import build_cluster, make_scheduler
+
+    deadline = 6.0  # >> paper-scale tool_mean_s=1.5: only the victim trips
+
+    def mk(**kw):
+        return build_cluster(make_scheduler("conserve"), n_prefill=1,
+                             n_decode=3, strict_accounting=True, **kw)
+
+    schedule = generate_chaos_schedule(seed + 1, [1, 2, 3], **_SIM_SCHED_KW)
+    first = apply_tool_timeouts(_workload(n_convs, "paper"), schedule,
+                                deadline)
+    w2 = _wave(max(2, n_convs // 4), "paper", 9000, 13)
+    w3 = _wave(max(2, n_convs // 4), "paper", 9500, 17)
+    everyone = first + w2 + w3
+
+    base = mk()
+    base_recs = base.serve(everyone)
+    span = max(t.last_token_s for r in base_recs for t in r.turns)
+    base_counts = {(r.cid, i): t.n_output_tokens
+                   for r in base_recs for i, t in enumerate(r.turns)}
+
+    sim = mk(tool_deadline_s=deadline, tool_timeout_action="evict",
+             **_QUARANTINE_KW)
+    arm_schedule(sim, schedule, span)
+    res = run_chaos(sim, first, schedule, span, second_wave=w2,
+                    quarantine_wave=w3)
+    counts = {k: sum(v) for k, v in res.gateway.streams.items()}
+    evidence = check_chaos_invariants(res.records, res.gateway, res.monitor,
+                                      schedule, everyone, base_counts,
+                                      streams=counts)
+    sim.check_accounting()
+    return {
+        "n_conversations": len(everyone),
+        "schedule_digest": schedule.digest,
+        "baseline_span_s": round(span, 4),
+        "all_complete": len(res.records) == len(everyone),
+        "streams_identical": True,
+        "zero_bad_placements": not res.monitor.violations,
+        "evidence": evidence,
+        **_metrics(sim, res.monitor, res.records, everyone, [1, 2, 3]),
+    }
+
+
+def main(quick: bool = False):
+    import jax
+
+    eng = _engine_chaos(n_convs=15 if quick else 24, seed=20260807)
+    emit("chaos_soak_engine",
+         eng["node_recovery_latency_p95_s"] * 1e6,
+         f"complete={eng['all_complete']};"
+         f"identical={eng['streams_identical']};"
+         f"quarantines={eng['evidence']['n_quarantines']};"
+         f"joins={eng['evidence']['n_joins']};"
+         f"avail={eng['decoder_availability_fraction']:.3f};"
+         f"replayed_frac={eng['replayed_token_fraction']:.4f}")
+
+    sim = _sim_chaos(n_convs=16 if quick else 32, seed=20260807)
+    emit("chaos_soak_sim",
+         sim["node_recovery_latency_p95_s"] * 1e6,
+         f"complete={sim['all_complete']};"
+         f"identical={sim['streams_identical']};"
+         f"quarantines={sim['evidence']['n_quarantines']};"
+         f"joins={sim['evidence']['n_joins']};"
+         f"avail={sim['decoder_availability_fraction']:.3f};"
+         f"replayed_frac={sim['replayed_token_fraction']:.4f}")
+
+    payload = {"backend": jax.default_backend(), "quick": quick,
+               "engine": eng, "simulator": sim}
+    (BENCH_QUICK_PATH if quick else BENCH_PATH).write_text(
+        json.dumps(payload, indent=1))
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

@@ -411,9 +411,24 @@ def live_serving_bench():
     live_serving.main(quick=True)
 
 
+def chaos_soak_bench():
+    """Seeded chaos soak on both backends (writes BENCH_chaos_soak.json at
+    the repo root). Series: `chaos_soak_engine` / `chaos_soak_sim` — one
+    byte-identical fault schedule (kill -> rejoin cycle, sustained slowdown
+    tripping the observed-straggler quarantine and recovering out of it,
+    KV-transfer fault, tool timeout) applied mid-flight to a live
+    gateway-driven multi-scenario workload; gated inside the run on
+    completion, per-(cid, turn) stream identity vs the fault-free offline
+    replay, zero placements on dead/quarantined nodes, and the quarantined
+    replica observably serving again. Reports node-recovery latency
+    p50/p95, replayed-token fraction and decoder-availability fraction."""
+    from . import chaos_soak
+    chaos_soak.main(quick=True)
+
+
 ALL = [fig01_trace_dist, fig02_prefill_curve, fig03_kv_transfer,
        fig04_tbt_heatmap, fig05_collocation, fig06_tbt_variance,
        fig07_powercap_prefill, fig08_powercap_decode, fig10_agentic_perf,
        fig11_cdfs, fig12_wrong_prediction, fig13_hetero, decode_tail_bench,
        prefill_path_bench, serve_overload_bench, fault_recovery_bench,
-       prefix_reuse_bench, live_serving_bench]
+       prefix_reuse_bench, live_serving_bench, chaos_soak_bench]

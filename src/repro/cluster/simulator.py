@@ -43,7 +43,7 @@ from repro.core.runtime import (Admission, AdmissionQueue, DECODING, DONE,
                                 PREFILLING, PrefixKVPool, Runtime,
                                 ServeSession, TOOL_WAIT, TRANSFERRING)
 from repro.core.scheduler import Scheduler
-from repro.core.signals import ClusterView, NodeState
+from repro.core.signals import NODE_ACTIVE, ClusterView, NodeState
 
 from .hardware import NodeCostModel
 
@@ -106,6 +106,10 @@ class SimNode:
     iterating: bool = False
     slow_factor: float = 1.0           # straggler injection
     alive: bool = True
+    # incarnation counter: bumped at every revival so completion callbacks
+    # dispatched against a PREVIOUS incarnation read as stale (the node
+    # died and rejoined while the work was notionally in flight)
+    gen: int = 0
     # energy accounting
     energy_j: float = 0.0
     last_energy_t: float = 0.0
@@ -125,16 +129,37 @@ class ClusterSimulator(Runtime):
                  chunk_tokens: int = 8192, decoder_chunk_tokens: int = 2944,
                  track_token_times: bool = False,
                  tool_deadline_s: Optional[float] = None,
-                 tool_timeout_action: str = "evict"):
+                 tool_timeout_action: str = "evict",
+                 strict_accounting: bool = False,
+                 max_transfer_retries: int = 3,
+                 transfer_retry_backoff_s: float = 0.01,
+                 quarantine_k: Optional[float] = None,
+                 quarantine_window: int = 3,
+                 quarantine_rejoin_k: Optional[float] = None):
         """tool_deadline_s / tool_timeout_action: TOOL_WAIT watchdog, same
         contract as EngineServer — off by default (None); "evict" frees the
         waiting conversation's KV for parked work (the tool return re-admits
         by deterministic replay, the dead-binding path), "fail" raises
-        loudly. Nothing parks forever on a tool that never returns."""
+        loudly. Nothing parks forever on a tool that never returns.
+        strict_accounting: engine-parity drift detection — at every
+        conversation end, assert the structural accounting invariants
+        (`check_accounting`).
+        max_transfer_retries / transfer_retry_backoff_s: bound on one-shot
+        KV-transfer attempts per binding, same contract (and same
+        exhaustion error) as EngineServer — see `inject_transfer_faults`.
+        quarantine_k / quarantine_window / quarantine_rejoin_k: the
+        observed-straggler quarantine trigger (Runtime contract; None
+        disables it) — see EngineServer for the semantics."""
         assert tool_timeout_action in ("evict", "fail")
         self.sched = scheduler
         self.tool_deadline_s = tool_deadline_s
         self.tool_timeout_action = tool_timeout_action
+        self.strict_accounting = strict_accounting
+        self.max_transfer_retries = int(max_transfer_retries)
+        self.transfer_retry_backoff_s = float(transfer_retry_backoff_s)
+        self.quarantine_k = quarantine_k
+        self.quarantine_window = int(quarantine_window)
+        self.quarantine_rejoin_k = quarantine_rejoin_k
         self.nodes = {n.node_id: n for n in nodes}
         for n in nodes:
             cap = n.cost.kv_capacity_tokens()
@@ -167,6 +192,10 @@ class ClusterSimulator(Runtime):
         # gone but the binding is remembered; tool return recovers by replay
         self._evicted: set = set()
         self.n_tool_evictions = 0
+        # one-shot KV-transfer fault state (engine parity)
+        self._bind_attempts: Dict[int, int] = {}
+        self._transfer_fault_budget = 0
+        self.n_transfer_retries = 0
 
     # ----- admission (Runtime contract) ----------------------------------------
     def _can_admit(self, node_id: int, adm: Admission) -> bool:
@@ -200,6 +229,16 @@ class ClusterSimulator(Runtime):
     # ----- event plumbing ------------------------------------------------------
     def at(self, t: float, fn: Callable):
         heapq.heappush(self._events, (max(t, self.now), next(self._seq), fn))
+
+    def call_at(self, t: float, fn: Callable) -> "ClusterSimulator":
+        """Engine-parity alias for `at` (the hook chaos drivers arm
+        time-scheduled faults through on either backend)."""
+        self.at(t, fn)
+        return self
+
+    @property
+    def now_s(self) -> float:
+        return self.now
 
     def run(self, until: Optional[float] = None):
         self.run_pending(until=until)
@@ -347,6 +386,7 @@ class ClusterSimulator(Runtime):
         if node.iterating or not node.prefill_q or not node.alive:
             return
         node.iterating = True
+        gen = node.gen
         job = node.prefill_q.pop(0)
         dur = node.cost.prefill_s(job.context_tokens,
                                   cached_prefix=job.context_tokens - job.n_tokens)
@@ -358,6 +398,14 @@ class ClusterSimulator(Runtime):
                 # the prefiller died mid-job: the computation never landed —
                 # re-place the job on a healthy prefill-capable node
                 node.iterating = False
+                node.state.queued_prefill_tokens -= job.n_tokens
+                self._replace_prefill_job(node.node_id, job)
+                return
+            if node.gen != gen:
+                # the node died AND rejoined while the job was in flight:
+                # the computation still never landed — re-place it, but
+                # leave the NEW incarnation's iterating flag alone (it owns
+                # the flag now)
                 node.state.queued_prefill_tokens -= job.n_tokens
                 self._replace_prefill_job(node.node_id, job)
                 return
@@ -376,8 +424,10 @@ class ClusterSimulator(Runtime):
         if mixed_node is not None:
             # collocated: the conversation already lives on the mixed replica
             self._bound[conv.cid] = mixed_node
+            g = self.nodes[mixed_node].gen
             self.at(t, lambda: self._start_turn(conv, 0, mixed_node,
-                                                arrival_t=conv.arrival_s))
+                                                arrival_t=conv.arrival_s,
+                                                gen=g))
             return
         # the one-shot KV binding passes admission on the chosen decoder:
         # when it is full (no slot / headroom for this context) the binding
@@ -394,6 +444,39 @@ class ClusterSimulator(Runtime):
     def _bind(self, conv: Conversation, node_id: int, t: float,
               kv_transfer: bool):
         dec = self.nodes[node_id]
+        if kv_transfer and self._transfer_fault_budget > 0:
+            # armed one-shot transfer fault (engine parity): the attempt
+            # dies before any KV lands; the binding retries with
+            # exponential backoff on a decoder the scheduler chooses
+            # FRESH at retry time, bounded by max_transfer_retries
+            self._transfer_fault_budget -= 1
+            self.n_transfer_retries += 1
+            attempt = self._bind_attempts.get(conv.cid, 0) + 1
+            self._bind_attempts[conv.cid] = attempt
+            if attempt > self.max_transfer_retries:
+                raise RuntimeError(
+                    f"KV transfer for conversation {conv.cid} failed on "
+                    f"{attempt} consecutive attempts "
+                    f"(max_transfer_retries={self.max_transfer_retries}); "
+                    f"giving up loudly")
+            self.sessions[conv.cid].transition(TRANSFERRING, t)
+            backoff = self.transfer_retry_backoff_s * (2 ** (attempt - 1))
+            self.log.append(
+                f"t={t:.3f} KV transfer to node {node_id} FAILED for cid "
+                f"{conv.cid} (attempt {attempt}); retrying in "
+                f"{backoff:.3f}s")
+
+            def retry(conv=conv):
+                pl = self.sched.bind_decoder(view_of(conv), self.view)
+                self._offer(pl.node_id,
+                            Admission(conv.cid, conv.first_input_len,
+                                      lambda nid, kv=pl.kv_transfer:
+                                      self._bind(conv, nid, self.now, kv)),
+                            self.now)
+
+            self.at(t + backoff, retry)
+            return
+        self._bind_attempts.pop(conv.cid, None)
         self._reserve(dec.state, conv.first_input_len)
         self._bound[conv.cid] = node_id
         self.sessions[conv.cid].node_id = node_id
@@ -403,8 +486,8 @@ class ClusterSimulator(Runtime):
         if kv_transfer:
             self.sessions[conv.cid].transition(TRANSFERRING, t)
             delay = self._transfer(conv.first_input_len, dec)
-        self.at(t + delay, lambda: self._start_turn(
-            conv, 0, node_id, arrival_t=conv.arrival_s))
+        self.at(t + delay, lambda g=dec.gen: self._start_turn(
+            conv, 0, node_id, arrival_t=conv.arrival_s, gen=g))
 
     def _transfer(self, n_tokens: int, node: SimNode) -> float:
         self.n_kv_transfers += 1
@@ -414,14 +497,17 @@ class ClusterSimulator(Runtime):
     # ----- turns -----------------------------------------------------------------
     def _start_turn(self, conv: Conversation, turn_idx: int, node_id: int,
                     prefilled: bool = True, cold: bool = False,
-                    arrival_t: Optional[float] = None):
+                    arrival_t: Optional[float] = None,
+                    gen: Optional[int] = None):
         """Begin decoding turn `turn_idx` on `node_id`. If not `prefilled`,
         the turn's append tokens still need (chunked) prefill on the node.
         `arrival_t` is when the turn became RUNNABLE (tool returned /
         conversation arrived) — queue and transfer waits count toward its
-        TTFT."""
+        TTFT. `gen` is the target's incarnation at schedule time: a landing
+        on a node that died (even if it has since rejoined cold — the KV
+        never arrived) recovers by replay."""
         node = self.nodes[node_id]
-        if not node.alive:
+        if not node.alive or (gen is not None and node.gen != gen):
             # the node died while this start was in flight (e.g. mid
             # KV-transfer): the failure's victim scan only sees installed
             # decode jobs, so the landing itself must observe the corpse —
@@ -486,8 +572,12 @@ class ClusterSimulator(Runtime):
         node.state.active_conversations -= 1
         node.state.used_slots = max(0, node.state.used_slots - 1)
         self.sched.on_conversation_end(conv.cid, self.view)
+        if self.strict_accounting:
+            self.check_accounting()
         # occupancy freed: re-offer parked admissions (backpressure)
         self._pump(node.node_id, self.now)
+        # a DRAINING node whose last resident tail just left re-activates
+        self._maybe_finish_draining(node.node_id, self.now)
 
     def _on_turn_arrival(self, conv: Conversation, turn_idx: int):
         bound = self._bound[conv.cid]
@@ -545,9 +635,11 @@ class ClusterSimulator(Runtime):
             # prefiller -> decoder write-back of the new (and, for AMPD,
             # reused) KV entries
             self.at(self.now + t_back,
-                    lambda: self._start_turn(conv, turn_idx, bound,
-                                             prefilled=True,
-                                             arrival_t=ready_t))
+                    lambda g=dec.gen: self._start_turn(conv, turn_idx,
+                                                       bound,
+                                                       prefilled=True,
+                                                       arrival_t=ready_t,
+                                                       gen=g))
 
         self.at(self.now + t_out, enqueue)
 
@@ -561,7 +653,13 @@ class ClusterSimulator(Runtime):
     def _iterate(self, node: SimNode):
         if not node.decode_jobs or not node.alive:
             node.iterating = False
+            if node.alive:
+                # the rotation just went idle: a DRAINING node whose last
+                # resident tail left re-activates here (the finish hook ran
+                # while `iterating` was still set)
+                self._maybe_finish_draining(node.node_id, self.now)
             return
+        gen = node.gen
         jobs = list(node.decode_jobs.values())
         decoding = [j for j in jobs if j.remaining_prefill == 0
                     and j.remaining_decode > 0]
@@ -587,6 +685,12 @@ class ClusterSimulator(Runtime):
             if not node.alive:
                 node.iterating = False
                 return
+            if node.gen != gen:
+                # the node died and rejoined mid-iteration: this completion
+                # belongs to the previous incarnation (its jobs were
+                # recovered at the failure); the new incarnation owns the
+                # iterating flag
+                return
             node.integrate_energy(
                 self.now, node.cost.power_w(1.0, memory_bound=(batch > 0)))
             node.busy_s += dur
@@ -595,6 +699,9 @@ class ClusterSimulator(Runtime):
                 ema = node.state.observed_tbt_ema_s
                 node.state.observed_tbt_ema_s = (0.9 * ema + 0.1 * dur) \
                     if ema else dur
+                # one observed decode chunk: advance the straggler-
+                # quarantine machine on the EMA that just updated
+                self._observe_chunk_tbt(node.node_id, self.now)
                 # rotation observables, mirroring the engine's lane-step
                 # counters: the cost model emits one token per live job per
                 # iteration and jobs leave the batch the moment they finish,
@@ -648,9 +755,21 @@ class ClusterSimulator(Runtime):
         node = self.nodes[node_id]
         if not node.alive:
             raise RuntimeError(f"node {node_id} failed twice")
+        node.integrate_energy(self.now, node.cost.tier.idle_w)
         node.alive = False
         node.state.alive = False
+        self._lifecycle_streaks.pop(node_id, None)
         victims = {j.cid for j in node.decode_jobs.values()}
+        # sever TOOL_WAIT bindings to the corpse NOW: lazy alive-checks at
+        # tool return would be fooled by a revival (the new incarnation's KV
+        # is cold — the old slot contents are gone). The existing evicted ->
+        # replay path in _on_turn_arrival re-admits them honestly.
+        for cid, bnid in self._bound.items():
+            if (bnid == node_id and cid not in victims
+                    and cid not in self._evicted
+                    and self.sessions[cid].state == TOOL_WAIT
+                    and not self.records[cid].done):
+                self._evicted.add(cid)
         # a dead mixed node's in-iteration turn-1 prefills vanish with the
         # decode jobs: release their share of the backlog observable (the
         # victims re-place it on whatever node recovery chooses)
@@ -691,6 +810,101 @@ class ClusterSimulator(Runtime):
             conv = self._convs[cid]
             done_turns = len(self._turn_recs[cid])
             self._recover(conv, min(done_turns, conv.n_turns - 1))
+
+    def revive_node(self, node_id: int, at_s: float):
+        """Schedule a failed node's COLD rejoin at logical time `at_s` (same
+        contract as EngineServer.recover_replica): resident counters are
+        already zero from the failure and stay zero, pooled prefix rows stay
+        invalidated, cumulative counters (busy_s, energy_j, bind_counts,
+        replayed_prefill_tokens, pool hit/eviction totals) survive. The node
+        re-enters `ClusterView.nodes()` and every admission queue is pumped.
+        Reviving an alive node raises; fail -> revive -> fail cycles are
+        legal (per-node incarnation generations keep stale completions from
+        the previous life off the new one)."""
+        self.at(at_s, lambda: self._revive(node_id))
+        return self
+
+    # engine-API parity, so benchmarks drive both backends uniformly
+    recover_replica = revive_node
+
+    def _revive(self, node_id: int):
+        node = self.nodes[node_id]
+        if node.alive:
+            raise RuntimeError(
+                f"node {node_id} is already alive; only a failed node can "
+                f"rejoin")
+        node.alive = True
+        node.state.alive = True
+        node.state.lifecycle = NODE_ACTIVE
+        # the observed-TBT history belongs to the previous incarnation
+        node.state.observed_tbt_ema_s = 0.0
+        self._lifecycle_streaks.pop(node_id, None)
+        node.gen += 1
+        node.iterating = False
+        node.last_energy_t = self.now  # the dead interval drew no power
+        self._rejoin_node(node_id, self.now, reason="from_dead")
+
+    def inject_slowdown(self, node_id: int, factor: float,
+                        at_s: Optional[float] = None):
+        """Stretch `node_id`'s measured iteration/prefill durations by
+        `factor` (slow, not wrong: outputs stay byte-identical). The
+        stretched durations feed `observed_tbt_ema_s`, which is exactly
+        what the observed-straggler quarantine conditions on. `factor=1.0`
+        ends the slowdown. Applies now, or at logical `at_s` if given."""
+        def arm():
+            self.nodes[node_id].slow_factor = float(factor)
+        if at_s is None:
+            arm()
+        else:
+            self.at(at_s, arm)
+        return self
+
+    def inject_transfer_faults(self, n: int = 1):
+        """Make the next `n` KV-transfer binds fail once each (engine-API
+        parity). Each faulted bind retries with bounded exponential backoff;
+        `max_transfer_retries` consecutive faults on one conversation
+        exhaust the budget and raise loudly."""
+        self._transfer_fault_budget += int(n)
+        return self
+
+    def _node_has_inflight(self, node_id: int) -> bool:
+        node = self.nodes[node_id]
+        if node.decode_jobs or node.prefill_q or node.iterating:
+            return True
+        # TOOL_WAIT sessions still bound here hold slots (resident tails)
+        return any(bnid == node_id and not self.records[cid].done
+                   and cid not in self._evicted
+                   for cid, bnid in self._bound.items())
+
+    def check_accounting(self) -> None:
+        """Structural occupancy invariants, checked after every conversation
+        completes when `strict_accounting=True` (engine-API parity). Every
+        quantity here is a counter the simulator already maintains."""
+        for nid, node in self.nodes.items():
+            st = node.state
+            q = len(self._admission[nid])
+            if st.queued_conversations != q:
+                raise AssertionError(
+                    f"node {nid}: queued_conversations={st.queued_conversations}"
+                    f" but admission queue holds {q}")
+            for name in ("active_kv_tokens", "active_conversations",
+                         "used_slots", "reserved_kv_tokens"):
+                v = getattr(st, name)
+                if v < 0:
+                    raise AssertionError(f"node {nid}: {name}={v} < 0")
+            if not node.alive:
+                if q or st.active_kv_tokens or st.active_conversations \
+                        or st.used_slots or st.reserved_kv_tokens:
+                    raise AssertionError(
+                        f"dead node {nid} holds resident state: "
+                        f"queue={q} kv={st.active_kv_tokens} "
+                        f"convs={st.active_conversations} "
+                        f"slots={st.used_slots} "
+                        f"reserved={st.reserved_kv_tokens}")
+            elif st.lifecycle != NODE_ACTIVE and q:
+                raise AssertionError(
+                    f"{st.lifecycle} node {nid} holds {q} parked "
+                    f"admissions; quarantine must drain them to peers")
 
     def _replace_admission(self, adm: Admission, now: float) -> Optional[int]:
         """Re-place one admission drained off a dead node through the same
@@ -754,6 +968,7 @@ class ClusterSimulator(Runtime):
             f"node {bound} (turn {next_idx} still waiting); KV freed for "
             f"parked work, tool return re-admits by replay")
         self._pump(bound, self.now)
+        self._maybe_finish_draining(bound, self.now)
 
     def _recover(self, conv: Conversation, turn_idx: int):
         """Deterministic replay: re-prefill the journaled context on the
@@ -787,8 +1002,8 @@ class ClusterSimulator(Runtime):
             dec2.state.used_slots += 1
             delay = self._transfer(ctx, dec2) if pl2.kv_transfer else 0.0
             self.at(t + delay,
-                    lambda: self._resume_turn(conv, turn_idx, pl2.node_id,
-                                              t0))
+                    lambda g=dec2.gen: self._resume_turn(
+                        conv, turn_idx, pl2.node_id, t0, gen=g))
 
         job = PrefillJob(cid=conv.cid, turn_idx=turn_idx, n_tokens=ctx,
                          context_tokens=ctx, enqueued_s=self.now,
@@ -796,9 +1011,10 @@ class ClusterSimulator(Runtime):
         self._enqueue_prefill(pf, job)
 
     def _resume_turn(self, conv: Conversation, turn_idx: int, node_id: int,
-                     recover_t0: Optional[float] = None):
+                     recover_t0: Optional[float] = None,
+                     gen: Optional[int] = None):
         node = self.nodes[node_id]
-        if not node.alive:
+        if not node.alive or (gen is not None and node.gen != gen):
             # the recovery target itself died before the resume landed:
             # recover again toward whatever is still healthy (the first
             # attempt's latency stays open — only successful resumes close)

@@ -29,6 +29,13 @@ Event kinds (the `data` payload names state owned elsewhere):
 * ``admission_admit`` — a previously parked admission ran
                      (``{"kind", "need_tokens"}``).
 * ``node_failure`` — a node died (``{"n_victims"}``).
+* ``node_join``    — a node (re)entered ACTIVE service: revival of a dead
+                     replica or an observed-EMA recovery out of quarantine
+                     (``{"reason": "from_dead" | "from_quarantine"}``).
+* ``node_quarantine`` — a node's observed_tbt_ema_s exceeded k× the fleet
+                     median over the configured window and it left the
+                     schedulable set (``{"observed_tbt_ema_s",
+                     "fleet_median_tbt_s", "k"}``).
 * ``recovery``     — a conversation REWOUND for deterministic replay: every
                      token already published for the named in-flight turn is
                      stale and will re-stream byte-identically. Subscribers
@@ -47,10 +54,13 @@ EV_TURN_FINISH = "turn_finish"
 EV_ADMISSION_PARK = "admission_park"
 EV_ADMISSION_ADMIT = "admission_admit"
 EV_NODE_FAILURE = "node_failure"
+EV_NODE_JOIN = "node_join"
+EV_NODE_QUARANTINE = "node_quarantine"
 EV_RECOVERY = "recovery"
 
 EVENT_KINDS = (EV_SESSION, EV_TOKENS, EV_TURN_FINISH, EV_ADMISSION_PARK,
-               EV_ADMISSION_ADMIT, EV_NODE_FAILURE, EV_RECOVERY)
+               EV_ADMISSION_ADMIT, EV_NODE_FAILURE, EV_NODE_JOIN,
+               EV_NODE_QUARANTINE, EV_RECOVERY)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -51,12 +51,14 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import statistics
 from collections import deque
 from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
                     Tuple)
 
-from .events import (EV_ADMISSION_ADMIT, EV_ADMISSION_PARK, EV_SESSION,
-                     EventBus, ServeEvent)
+from .events import (EV_ADMISSION_ADMIT, EV_ADMISSION_PARK, EV_NODE_JOIN,
+                     EV_NODE_QUARANTINE, EV_SESSION, EventBus, ServeEvent)
+from .signals import NODE_ACTIVE, NODE_DRAINING, NODE_QUARANTINED
 
 # ----- session states --------------------------------------------------------
 QUEUED = "QUEUED"              # submitted / waiting for admission
@@ -435,6 +437,17 @@ class Runtime(abc.ABC):
     # DURING the event loop — staged arrivals inject mid-flight); True once
     # run() completed or close() was called, after which submit() raises
     _closed: bool = False
+    # observed-straggler quarantine config (None disables the trigger; both
+    # backends expose these as constructor parameters). A node flips
+    # ACTIVE -> QUARANTINED when its observed_tbt_ema_s exceeds
+    # quarantine_k × the fleet median for quarantine_window consecutive
+    # observed decode chunks, and requalifies (-> DRAINING -> ACTIVE) once
+    # it falls back below quarantine_rejoin_k × median (defaults to
+    # quarantine_k) for the same window. Every quantity involved is an
+    # observation the runtime already owns — never a failure prediction.
+    quarantine_k: Optional[float] = None
+    quarantine_window: int = 3
+    quarantine_rejoin_k: Optional[float] = None
 
     # ----- protocol ----------------------------------------------------------
     @abc.abstractmethod
@@ -466,6 +479,14 @@ class Runtime(abc.ABC):
         return self.submit(convs).run().results()
 
     # ----- lifecycle ---------------------------------------------------------
+    @property
+    def now_s(self) -> float:
+        """The runtime's current logical-clock instant. Backends override
+        (engine `_now`, simulator `now`); shared read path for front ends
+        (gateway, chaos driver) that arm time-scheduled faults."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not expose now_s")
+
     @property
     def runtime_state(self) -> str:
         """"accepting" while submissions are legal, "closed" after."""
@@ -549,6 +570,125 @@ class Runtime(abc.ABC):
         self.sessions[cid] = sess
         return sess
 
+    # ----- replica lifecycle (observed-straggler quarantine) -----------------
+    @property
+    def _lifecycle_streaks(self) -> Dict[int, Tuple[int, int]]:
+        """Per-node (consecutive-above, consecutive-below) chunk counters for
+        the quarantine trigger — lazily created like the bus so backends
+        need no ctor changes. Counters of observed chunk comparisons that
+        already happened, nothing predictive."""
+        d = self.__dict__.get("_lc_streaks")
+        if d is None:
+            d = self.__dict__["_lc_streaks"] = {}
+        return d
+
+    def _node_has_inflight(self, node_id: int) -> bool:
+        """True while `node_id` still runs or holds in-flight work (decode
+        tails, queued prefill, bound sessions). Backends override; the base
+        says False so QUARANTINED -> ACTIVE requalification is immediate."""
+        return False
+
+    def _observe_chunk_tbt(self, node_id: int, now: float):
+        """Lifecycle trigger, called by both backends immediately after every
+        `observed_tbt_ema_s` update (one observed decode chunk). Compares the
+        node's own EMA against the median of its live ACTIVE decode-capable
+        peers — both sides of the comparison are maintained observations —
+        and advances the ACTIVE -> QUARANTINED -> DRAINING -> ACTIVE machine.
+
+        Known (documented) limit of observation-only rejoin: a quarantined
+        node with no in-flight tails produces no new chunk observations, so
+        its EMA can never be observed to recover and it stays QUARANTINED
+        until revived externally — the trigger never invents a probe."""
+        if self.quarantine_k is None:
+            return
+        st = self.view.node(node_id)
+        if not st.alive or st.observed_tbt_ema_s <= 0:
+            return
+        peers = [n.observed_tbt_ema_s for n in self.view.nodes()
+                 if n.role in ("decode", "mixed") and n.node_id != node_id
+                 and n.observed_tbt_ema_s > 0]
+        if not peers:
+            return  # no healthy peer baseline to compare against
+        med = statistics.median(peers)
+        if med <= 0:
+            return
+        streaks = self._lifecycle_streaks
+        above, below = streaks.get(node_id, (0, 0))
+        rejoin_k = (self.quarantine_k if self.quarantine_rejoin_k is None
+                    else self.quarantine_rejoin_k)
+        if st.lifecycle == NODE_ACTIVE:
+            above = above + 1 if st.observed_tbt_ema_s > \
+                self.quarantine_k * med else 0
+            streaks[node_id] = (above, 0)
+            if above >= self.quarantine_window:
+                streaks[node_id] = (0, 0)
+                self._quarantine_node(node_id, now, st.observed_tbt_ema_s,
+                                      med)
+        elif st.lifecycle == NODE_QUARANTINED:
+            below = below + 1 if st.observed_tbt_ema_s <= rejoin_k * med \
+                else 0
+            streaks[node_id] = (0, below)
+            if below >= self.quarantine_window:
+                streaks[node_id] = (0, 0)
+                if self._node_has_inflight(node_id):
+                    st.lifecycle = NODE_DRAINING
+                else:
+                    self._rejoin_node(node_id, now,
+                                      reason="from_quarantine")
+        # DRAINING: requalified already — only waiting on resident tails;
+        # _maybe_finish_draining (called at every release point) completes it
+
+    def _quarantine_node(self, node_id: int, now: float, ema: float,
+                         med: float):
+        """Flip `node_id` out of the schedulable set: it takes no new
+        placements or refills (ClusterView.nodes() hides it; _offer refuses
+        it), its parked admissions re-place to peers through the same
+        decision points a failure drain uses, and its in-flight tails keep
+        running — they are the observation source the rejoin rule needs."""
+        st = self.view.node(node_id)
+        st.lifecycle = NODE_QUARANTINED
+        log = getattr(self, "log", None)
+        if log is not None:
+            log.append(
+                f"t={now:.3f} QUARANTINE node {node_id}: observed TBT EMA "
+                f"{ema:.6f}s > {self.quarantine_k}x fleet median "
+                f"{med:.6f}s over {self.quarantine_window} chunks")
+        self._publish(EV_NODE_QUARANTINE, now, node_id=node_id,
+                      observed_tbt_ema_s=ema, fleet_median_tbt_s=med,
+                      k=self.quarantine_k)
+        self._drain_dead_node(node_id, now)
+
+    def _rejoin_node(self, node_id: int, now: float, *, reason: str):
+        """`node_id` (re)enters ACTIVE service — revival of a dead replica
+        (`reason="from_dead"`) or an observed-EMA recovery out of quarantine
+        (`reason="from_quarantine"`). Publishes `node_join`, then pumps
+        EVERY active node's admission queue so parked work lands on the
+        rejoined capacity immediately."""
+        st = self.view.node(node_id)
+        st.lifecycle = NODE_ACTIVE
+        self._lifecycle_streaks.pop(node_id, None)
+        log = getattr(self, "log", None)
+        if log is not None:
+            log.append(f"t={now:.3f} JOIN node {node_id} ({reason})")
+        self._publish(EV_NODE_JOIN, now, node_id=node_id, reason=reason)
+        self._pump_all(now)
+
+    def _maybe_finish_draining(self, node_id: int, now: float):
+        """Release-point hook: a DRAINING node whose last in-flight tail
+        just left re-activates."""
+        st = self.view.node(node_id)
+        if (st.alive and st.lifecycle == NODE_DRAINING
+                and not self._node_has_inflight(node_id)):
+            self._rejoin_node(node_id, now, reason="from_quarantine")
+
+    def _pump_all(self, now: float):
+        """Pump every schedulable node's admission queue — the rejoin path:
+        a reoffer policy may now move parked work onto the fresh node."""
+        for nid in self._admission:
+            st = self.view.node(nid)
+            if st.alive and st.lifecycle == NODE_ACTIVE:
+                self._pump(nid, now)
+
     # ----- failure mechanism -------------------------------------------------
     def _replace_admission(self, adm: Admission, now: float) -> Optional[int]:
         """Re-place one admission drained from a dead node's queue through
@@ -562,24 +702,34 @@ class Runtime(abc.ABC):
             f"but implements no _replace_admission")
 
     def _drain_dead_node(self, node_id: int, now: float):
-        """Shared failure semantics: a dead node's parked admissions would
-        never be pumped — drain them and re-place each via
-        `_replace_admission`, guarding the result. With overlapping failures
-        the chosen target can itself be dead, or the cluster may have no
-        healthy candidate at all (the scheduler helpers raise); both must
-        fail loudly here instead of re-parking work on a corpse."""
+        """Shared failure/quarantine semantics: an unschedulable node's
+        parked admissions would never be pumped — drain them and re-place
+        each via `_replace_admission`, guarding the result. (The name keeps
+        the failure contract's original entry point; quarantine reuses the
+        identical mechanism on a still-alive node.) With overlapping
+        failures the chosen target can itself be dead or quarantined, or
+        the cluster may have no healthy candidate at all (the scheduler
+        helpers raise); all must fail loudly here instead of re-parking
+        work on an unschedulable node."""
         st = self.view.node(node_id)
         for adm in self._admission[node_id].drain():
             st.queued_conversations -= 1
             target = self._replace_admission(adm, now)
             if target is None:
                 continue
-            if not self.view.node(target).alive:
+            tgt = self.view.node(target)
+            if not tgt.alive:
                 raise RuntimeError(
                     f"re-placement of conversation {adm.cid} "
                     f"({adm.kind}) off dead node {node_id} chose node "
                     f"{target}, which is also dead; schedulers must place "
                     f"on live nodes only")
+            if tgt.lifecycle != NODE_ACTIVE:
+                raise RuntimeError(
+                    f"re-placement of conversation {adm.cid} "
+                    f"({adm.kind}) off node {node_id} chose node "
+                    f"{target}, which is {tgt.lifecycle}; schedulers must "
+                    f"place on ACTIVE nodes only")
             self._on_reoffer_move(adm, node_id, target)
             self._offer(target, adm, now)
 
@@ -588,12 +738,20 @@ class Runtime(abc.ABC):
         is already waiting (FIFO fairness); otherwise park it in the node's
         admission queue and flip the session to QUEUED. Returns True when the
         work ran now."""
-        if not self.view.node(node_id).alive:
+        target = self.view.node(node_id)
+        if not target.alive:
             # work offered to a dead node would park in a queue nothing ever
             # pumps — every placement path must name a live node
             raise RuntimeError(
                 f"admission for conversation {adm.cid} ({adm.kind}) offered "
                 f"to dead node {node_id}; placements must name a live node")
+        if target.lifecycle != NODE_ACTIVE:
+            # a quarantined/draining node takes no new placements; parked
+            # work there would wait on a node that refuses refills
+            raise RuntimeError(
+                f"admission for conversation {adm.cid} ({adm.kind}) offered "
+                f"to {target.lifecycle} node {node_id}; placements must "
+                f"name an ACTIVE node")
         q = self._admission[node_id]
         # evaluate capacity even when others are waiting: _can_admit is also
         # where work that can NEVER fit raises — that must happen at offer
@@ -633,9 +791,13 @@ class Runtime(abc.ABC):
 
         Admission stops at the first selected conversation this node cannot
         take (head-of-line semantics under FIFO; a reordering policy picks
-        its own head)."""
+        its own head). A non-ACTIVE node never refills (its queue was
+        drained at the transition; the guard keeps release-point callers
+        honest)."""
         q = self._admission[node_id]
         st = self.view.node(node_id)
+        if not st.alive or st.lifecycle != NODE_ACTIVE:
+            return
         while len(q):
             cids = q.cids()
             order = self.sched.select_refill(node_id, list(cids), self.view)

@@ -20,6 +20,20 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+# ----- replica lifecycle states ----------------------------------------------
+# ACTIVE      — takes placements and refills (the only schedulable state).
+# QUARANTINED — observed straggler: its observed_tbt_ema_s exceeded k× the
+#               fleet median over a window of observed chunks. Takes no new
+#               placements or refills; parked admissions drain to peers;
+#               in-flight tails keep running so observations keep flowing.
+# DRAINING    — the quarantined node's observed EMA recovered but in-flight
+#               tails remain; it re-activates when the last tail leaves.
+# A dead node (alive=False) has no lifecycle of its own: revival resets it
+# to ACTIVE. All transitions condition on observed state only.
+NODE_ACTIVE = "ACTIVE"
+NODE_QUARANTINED = "QUARANTINED"
+NODE_DRAINING = "DRAINING"
+
 
 @dataclasses.dataclass
 class PrefillLatencyCurve:
@@ -80,6 +94,9 @@ class NodeState:
     # health (observation-based straggler signal)
     observed_tbt_ema_s: float = 0.0
     alive: bool = True
+    # lifecycle (see module constants): only alive+ACTIVE nodes are visible
+    # through ClusterView.nodes(), so schedulers never place on a straggler
+    lifecycle: str = NODE_ACTIVE
     # failure-recovery observable: prefill tokens this node computed to
     # REBUILD journaled context after a replica death or tool-deadline
     # eviction — replay work is charged here, never to the victim
@@ -145,7 +162,8 @@ class ClusterView:
         self.prefill_curve = prefill_curve
 
     def nodes(self, role: Optional[str] = None) -> List[NodeState]:
-        out = [n for n in self._nodes.values() if n.alive]
+        out = [n for n in self._nodes.values()
+               if n.alive and n.lifecycle == NODE_ACTIVE]
         if role:
             out = [n for n in out if n.role == role]
         return out

@@ -66,7 +66,8 @@ from repro.core.runtime import (Admission, AdmissionQueue,
                                 PREFILLING, QUEUED, Runtime, ServeSession,
                                 TOOL_WAIT, TRANSFERRING)
 from repro.core.scheduler import Scheduler
-from repro.core.signals import ClusterView, NodeState, PrefillLatencyCurve
+from repro.core.signals import (NODE_ACTIVE, ClusterView, NodeState,
+                                PrefillLatencyCurve)
 
 from .kvcache import prefix_hash
 from .replica import DECODE_CHUNKS, ReplicaEngine, decode_chunk_floor
@@ -100,7 +101,10 @@ class EngineServer(Runtime):
                  tool_deadline_s: Optional[float] = None,
                  tool_timeout_action: str = "evict",
                  max_transfer_retries: int = 3,
-                 transfer_retry_backoff_s: float = 0.01):
+                 transfer_retry_backoff_s: float = 0.01,
+                 quarantine_k: Optional[float] = None,
+                 quarantine_window: int = 3,
+                 quarantine_rejoin_k: Optional[float] = None):
         """decode_mode: "fused" runs up to `max_decode_chunk` tokens per
         dispatch through the donated in-place RAGGED scan (`decode_steps`):
         each slot consumes only its own per-slot share, and turns that
@@ -143,7 +147,14 @@ class EngineServer(Runtime):
         KV-transfer attempts per binding (see `inject_transfer_faults`);
         each failed attempt backs off exponentially from the base and
         re-asks `Scheduler.bind_decoder` for a (possibly different)
-        decoder. Exhausting the bound raises loudly."""
+        decoder. Exhausting the bound raises loudly.
+        quarantine_k / quarantine_window / quarantine_rejoin_k: the
+        observed-straggler quarantine trigger (Runtime contract; None
+        disables it). A replica whose observed_tbt_ema_s exceeds
+        quarantine_k × the fleet median for quarantine_window consecutive
+        decode chunks leaves the schedulable set (lifecycle QUARANTINED),
+        and requalifies once it falls back below quarantine_rejoin_k ×
+        median (defaults to quarantine_k) for the same window."""
         assert decode_mode in ("fused", "reference")
         assert prefill_mode in (None, "jit", "reference")
         assert tool_timeout_action in ("evict", "fail")
@@ -223,6 +234,17 @@ class EngineServer(Runtime):
         self.n_transfer_retries = 0
         self.n_tool_evictions = 0
         self.n_recoveries = 0
+        # ----- replica lifecycle state -----
+        self.quarantine_k = quarantine_k
+        self.quarantine_window = int(quarantine_window)
+        self.quarantine_rejoin_k = quarantine_rejoin_k
+        # injected slowdown factor per replica (1.0 = healthy); stretches
+        # every measured dt on the logical clock — see inject_slowdown
+        self._slow: Dict[int, float] = {}
+        # incarnation counter per replica: bumped at every revival so
+        # fail -> recover -> fail cycles are distinguishable observations
+        self._node_gen: Dict[int, int] = {
+            r.replica_id: 0 for r in replicas}
         self.log: List[str] = []
         # sampled token stream per (cid, turn_idx) when record_tokens is
         # set — first token from the turn's prefill, then every decoded
@@ -311,6 +333,22 @@ class EngineServer(Runtime):
 
     def _push(self, t: float, fn):
         heapq.heappush(self._events, (t, next(self._seq), fn))
+
+    def call_at(self, t: float, fn) -> "EngineServer":
+        """Schedule `fn()` on the event heap at logical time `t` — the hook
+        chaos drivers arm time-scheduled faults through."""
+        self._push(max(t, self._now), fn)
+        return self
+
+    @property
+    def now_s(self) -> float:
+        return self._now
+
+    def _stretched(self, node_id: int, dt: float) -> float:
+        """Apply any injected slowdown to a measured compute time before it
+        advances the logical clock (and hence the observed TBT EMA). Token
+        content never changes — a straggler is slow, not wrong."""
+        return dt * self._slow.get(node_id, 1.0)
 
     # ----- Runtime protocol --------------------------------------------------------
     def submit(self, convs: List[Conversation]) -> "EngineServer":
@@ -463,6 +501,7 @@ class EngineServer(Runtime):
                             node.cfg.d_model), node.cfg.jnp_dtype)
         next_tok, dt = node.prefill_conversation(
             slot, tokens, fe, prefix_len=self._prefix_split(conv, node))
+        dt = self._stretched(node_id, dt)
         self._sync_pool_state(node_id)
         done_t = start + dt
         self.clock[node_id] = done_t
@@ -732,6 +771,7 @@ class EngineServer(Runtime):
                 n = decode_chunk_floor(int(rem[emit].max()))
             rem = np.minimum(rem, n)
             seq, dt = node.decode_steps(next_tokens, emit, rem)
+        dt = self._stretched(node_id, dt)
         t_done = start + dt
         per_tok = dt / n
         self.clock[node_id] = t_done
@@ -744,6 +784,9 @@ class EngineServer(Runtime):
         st.decode_lane_steps_live += int(rem[emit].sum())
         ema = st.observed_tbt_ema_s
         st.observed_tbt_ema_s = 0.9 * ema + 0.1 * per_tok if ema else per_tok
+        # one observed decode chunk: advance the straggler-quarantine
+        # machine on the EMA that just updated (shared Runtime trigger)
+        self._observe_chunk_tbt(node_id, t_done)
 
         for task in q:
             slot = task.slot
@@ -830,6 +873,8 @@ class EngineServer(Runtime):
                 self.check_accounting()
             # occupancy freed: re-offer parked admissions (backpressure)
             self._pump(node_id, self._now)
+            # a DRAINING node whose last resident tail just left rejoins
+            self._maybe_finish_draining(node_id, self._now)
 
     # ----- turn 2+ --------------------------------------------------------------------
     def _next_turn(self, conv: Conversation, idx: int, ready_t: float):
@@ -858,6 +903,7 @@ class EngineServer(Runtime):
             start = max(ready_t, self.clock[node_id])
             self.sessions[conv.cid].transition(PREFILLING, start)
             next_tok, dt = node.append_prefill(slot, tokens)
+            dt = self._stretched(node_id, dt)
             self.clock[node_id] = start + dt
             self.states[node_id].active_kv_tokens += len(tokens)
             self._begin_decode(conv, idx, int(next_tok), start + dt,
@@ -893,6 +939,7 @@ class EngineServer(Runtime):
         t0 = max(ready_t, self.clock[remote_id]) + nbytes / self.link_bw
         self.sessions[conv.cid].transition(PREFILLING, t0)
         next_tok, dt = remote.append_prefill(rslot, tokens)
+        dt = self._stretched(remote_id, dt)
         # the append landed in the remote slot: mirror it before the release
         # below subtracts the slot's full (grown) length
         rst.active_kv_tokens += len(tokens)
@@ -923,12 +970,70 @@ class EngineServer(Runtime):
     # simulator-API parity, so benchmarks drive both backends uniformly
     inject_failure = fail_replica
 
+    def recover_replica(self, node_id: int, at_s: float) -> "EngineServer":
+        """Schedule failed replica `node_id` to REJOIN at logical time
+        `at_s`, cold: its slot cache and prefix pool stay invalidated (they
+        died with the node), resident counters are zero, cumulative
+        counters (hits, evictions, replayed tokens) survive — they count
+        events that already happened. The node re-enters
+        `ClusterView.nodes()` and every admission queue is pumped so parked
+        work can land on the fresh capacity immediately. fail -> recover ->
+        fail cycles are legal (per-node generations); recovering a replica
+        that is still alive raises."""
+        self._push(at_s, lambda: self._recover_node(node_id))
+        return self
+
+    # simulator-API parity (mirrors fail_replica / inject_failure)
+    revive_node = recover_replica
+
+    def _recover_node(self, node_id: int):
+        st = self.states[node_id]
+        if st.alive:
+            raise RuntimeError(
+                f"replica {node_id} is already alive; only a failed "
+                f"replica can rejoin")
+        st.alive = True
+        st.lifecycle = NODE_ACTIVE
+        # the EMA observed the PREVIOUS incarnation's chunks; the rejoined
+        # replica starts with no observations of its own
+        st.observed_tbt_ema_s = 0.0
+        self._node_gen[node_id] = self._node_gen.get(node_id, 0) + 1
+        # the node's logical clock never ran backwards while dead
+        self.clock[node_id] = max(self.clock[node_id], self._now)
+        self._rejoin_node(node_id, self._now, reason="from_dead")
+
+    def _node_has_inflight(self, node_id: int) -> bool:
+        """In-flight work resident on `node_id`: batched or staged decode
+        tasks, plus any session whose KV slot binding names the node
+        (TOOL_WAIT sessions hold their slot between turns)."""
+        if self._decode_q[node_id] or self._ready[node_id]:
+            return True
+        return any(nid == node_id for nid, _ in self._slots.values())
+
+    def inject_slowdown(self, node_id: int, factor: float,
+                        at_s: Optional[float] = None) -> "EngineServer":
+        """Stretch replica `node_id`'s measured compute times by `factor`
+        on the logical clock from `at_s` (immediately when None). The
+        straggler is SLOW, not wrong: token content is untouched, but every
+        dt the server measures — prefill, append-prefill, decode chunks —
+        is multiplied before it advances the node clock, so the TBT EMA
+        observes the slowdown and the quarantine trigger can act on it.
+        factor=1.0 ends the slowdown."""
+        def arm():
+            self._slow[node_id] = float(factor)
+        if at_s is None:
+            arm()
+        else:
+            self._push(at_s, arm)
+        return self
+
     def _fail(self, node_id: int):
         node = self.replicas[node_id]
         st = self.states[node_id]
         if not st.alive:
             raise RuntimeError(f"replica {node_id} failed twice")
         st.alive = False
+        self._lifecycle_streaks.pop(node_id, None)
         # find the victims BEFORE tearing state down. Only DECODING sessions
         # need immediate replay (staged ready turns included — their session
         # is already DECODING); TOOL_WAIT sessions hold no runnable work and
@@ -936,13 +1041,21 @@ class EngineServer(Runtime):
         # PREFILLING/TRANSFERRING run synchronously inside one event, so no
         # session can be caught mid-stage at an event boundary.
         victims = []
-        for cid, (nid, _slot) in self._slots.items():
+        for cid, (nid, _slot) in list(self._slots.items()):
             if nid != node_id:
                 continue
             sess = self.sessions[cid]
             if sess.state == DECODING:
                 victims.append((self._convs[cid], sess.turn_idx,
                                 self._turn_arrival.get(cid, self._now)))
+            else:
+                # a TOOL_WAIT session's binding dies WITH the node: sever it
+                # now so a later revival (recover_replica) can't make the
+                # stale slot reference look valid again — the tool return
+                # finds no binding and recovers by journaled replay exactly
+                # as it would against a still-dead node
+                self._slots.pop(cid)
+                sess.node_id = None
         # the replica's KV is gone at once: invalidate every slot and zero
         # the mirroring observables wholesale (strict accounting keeps
         # checking dead replicas against exactly this ground truth)
@@ -1058,6 +1171,7 @@ class EngineServer(Runtime):
         # pool serves/repopulates the preamble exactly like a fresh arrival
         next_tok, dt = node.prefill_conversation(
             slot, ctx, fe, prefix_len=self._prefix_split(conv, node))
+        dt = self._stretched(node_id, dt)
         self._sync_pool_state(node_id)
         done_t = start + dt
         self.clock[node_id] = done_t
@@ -1142,6 +1256,7 @@ class EngineServer(Runtime):
             f"for parked work, tool return re-admits by replay")
         # the freed slot turns around into waiting work immediately
         self._pump(node_id, self._now)
+        self._maybe_finish_draining(node_id, self._now)
 
     def inject_transfer_faults(self, n: int = 1) -> "EngineServer":
         """Arm `n` one-shot KV-transfer failures: each of the next `n`

@@ -35,8 +35,8 @@ from collections import Counter
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.conversation import Conversation
-from repro.core.events import (EV_RECOVERY, EV_SESSION, EV_TOKENS,
-                               ServeEvent)
+from repro.core.events import (EV_NODE_JOIN, EV_NODE_QUARANTINE, EV_RECOVERY,
+                               EV_SESSION, EV_TOKENS, ServeEvent)
 from repro.core.runtime import DONE, Runtime
 
 
@@ -44,7 +44,26 @@ class GatewayOverloaded(RuntimeError):
     """Raised by `ServeGateway.submit` when the circuit breaker sheds new
     admissions: every live node's admission queue is deeper than the
     watermark. In-flight conversations are untouched — the caller is told
-    to back off, which is the observable backpressure contract."""
+    to back off, which is the observable backpressure contract.
+
+    Carries two observed quantities so callers can back off intelligently
+    (both read straight from `NodeState` at shed time — no new bookkeeping):
+
+    * `min_queue_depth` — the SHALLOWEST live node's admission-queue depth
+      (by definition > watermark, or nothing would have shed);
+    * `retry_after_s` — a drain-rate-derived hint: the shallowest node's
+      queue depth × its observed mean resident context × its observed TBT
+      EMA. 0.0 when that node has no decode observations yet (nothing
+      observed means no basis for a hint — the contract forbids inventing
+      a prediction).
+    """
+
+    def __init__(self, message: str, *,
+                 min_queue_depth: Optional[int] = None,
+                 retry_after_s: Optional[float] = None):
+        super().__init__(message)
+        self.min_queue_depth = min_queue_depth
+        self.retry_after_s = retry_after_s
 
 
 class ServeGateway:
@@ -130,11 +149,28 @@ class ServeGateway:
             if live and all(d > self.shed_watermark
                             for d in depths.values()):
                 self.n_shed += len(convs)
+                # observed-drain hint off the SHALLOWEST live node: its
+                # queue drains one conversation per (mean resident context
+                # × observed TBT) — every factor is a NodeState read
+                shallow = min(live, key=lambda n: n.queued_conversations)
+                min_depth = shallow.queued_conversations
+                if (shallow.observed_tbt_ema_s <= 0
+                        or shallow.active_conversations <= 0):
+                    retry_after = 0.0
+                else:
+                    mean_ctx = (shallow.active_kv_tokens
+                                / shallow.active_conversations)
+                    retry_after = (min_depth * mean_ctx
+                                   * shallow.observed_tbt_ema_s)
                 raise GatewayOverloaded(
                     f"shedding {len(convs)} conversation(s): every live "
                     f"node's admission queue exceeds the watermark "
                     f"{self.shed_watermark} (depths: {depths}); retry "
-                    f"after queues drain")
+                    f"after queues drain"
+                    + (f" (~{retry_after:.3f}s observed-drain hint)"
+                       if retry_after > 0 else ""),
+                    min_queue_depth=min_depth,
+                    retry_after_s=retry_after)
         self._pending.extend(convs)
         self.n_submitted += len(convs)
         return self
@@ -198,6 +234,7 @@ class ServeGateway:
             nodes[st.node_id] = {
                 "role": st.role,
                 "alive": st.alive,
+                "lifecycle": st.lifecycle,
                 "kv_headroom_tokens": st.kv_headroom_tokens,
                 "queued_conversations": st.queued_conversations,
                 "masked_forward_fraction": st.masked_forward_fraction,
@@ -208,6 +245,9 @@ class ServeGateway:
             "n_submitted": self.n_submitted,
             "n_shed": self.n_shed,
             "n_done": len(self.done_cids),
+            "n_node_joins": self.events_seen.get(EV_NODE_JOIN, 0),
+            "n_node_quarantines": self.events_seen.get(
+                EV_NODE_QUARANTINE, 0),
             "events_seen": dict(self.events_seen),
             "nodes": nodes,
         }

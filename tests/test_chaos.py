@@ -1,0 +1,231 @@
+"""Chaos harness contract: seeded schedules are byte-identical functions of
+their seed, the tool-timeout materializer mutates a COPY of the workload,
+the placement monitor rejects any admission targeting a dead or quarantined
+node at the instant it is published, and a full simulator chaos soak
+(kill -> rejoin, quarantine round trip, transfer fault, tool timeout)
+completes with streams identical to the fault-free offline replay."""
+import dataclasses
+from types import SimpleNamespace
+
+import pytest
+
+from repro.chaos import (ChaosEvent, ChaosSchedule, PlacementMonitor,
+                         apply_tool_timeouts, check_chaos_invariants,
+                         generate_chaos_schedule)
+from repro.chaos.schedule import (FAULT_KILL, FAULT_REJOIN, FAULT_SLOWDOWN,
+                                  FAULT_SLOWDOWN_END, FAULT_TOOL_TIMEOUT,
+                                  FAULT_TRANSFER)
+from repro.core.conversation import Conversation, Turn
+from repro.core.events import (EV_ADMISSION_ADMIT, EV_ADMISSION_PARK,
+                               EV_NODE_FAILURE, EV_NODE_JOIN, EventBus,
+                               ServeEvent)
+from repro.core.signals import NODE_ACTIVE, NODE_QUARANTINED
+
+
+# --------------------------------------------------------------------------- #
+# schedule generation: pure function of (seed, args)
+# --------------------------------------------------------------------------- #
+def test_schedule_is_seed_deterministic():
+    a = generate_chaos_schedule(42, [1, 2, 3])
+    b = generate_chaos_schedule(42, [1, 2, 3])
+    assert a.events == b.events
+    assert a.to_json() == b.to_json()
+    assert a.digest == b.digest
+
+
+def test_schedule_digest_changes_with_seed():
+    digests = {generate_chaos_schedule(s, [1, 2]).digest for s in range(8)}
+    assert len(digests) == 8
+
+
+def test_schedule_structure():
+    sched = generate_chaos_schedule(7, [1, 2, 3], n_transfer_faults=2)
+    kinds = sched.kinds()
+    # guaranteed composition: one kill->rejoin cycle, one slowdown window,
+    # the requested transfer faults, one tool timeout
+    assert kinds[FAULT_KILL] == 1 and kinds[FAULT_REJOIN] == 1
+    assert kinds[FAULT_SLOWDOWN] == 1 and kinds[FAULT_SLOWDOWN_END] == 1
+    assert kinds[FAULT_TRANSFER] == 2 and kinds[FAULT_TOOL_TIMEOUT] == 1
+
+    (kill,), (rejoin,) = sched.of_kind(FAULT_KILL), sched.of_kind(FAULT_REJOIN)
+    (slow,), (slow_end,) = (sched.of_kind(FAULT_SLOWDOWN),
+                            sched.of_kind(FAULT_SLOWDOWN_END))
+    assert rejoin.node_id == kill.node_id and rejoin.at_frac > kill.at_frac
+    assert slow_end.node_id == slow.node_id
+    assert slow_end.at_frac > slow.at_frac and slow.factor > 1.0
+    # the kill victim and the slowdown victim differ by construction
+    assert kill.node_id != slow.node_id
+    # events come time-ordered
+    fracs = [e.at_frac for e in sched.events]
+    assert fracs == sorted(fracs)
+
+
+def test_schedule_respects_protected_nodes():
+    for seed in range(16):
+        sched = generate_chaos_schedule(seed, [0, 1, 2], protected=[0])
+        victims = {e.node_id for e in sched.events if e.node_id is not None}
+        assert 0 not in victims
+
+
+def test_schedule_requires_two_eligible_victims():
+    with pytest.raises(ValueError, match="fault-eligible"):
+        generate_chaos_schedule(1, [1])
+    with pytest.raises(ValueError, match="fault-eligible"):
+        generate_chaos_schedule(1, [0, 1], protected=[1])
+
+
+def test_unknown_fault_kind_rejected():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        ChaosEvent("power_surge", 0.5, node_id=1)
+
+
+def test_schedule_json_round_trips_digest():
+    sched = generate_chaos_schedule(3, [1, 2])
+    clone = ChaosSchedule(
+        seed=sched.seed,
+        events=tuple(ChaosEvent(**dataclasses.asdict(e))
+                     for e in sched.events))
+    assert clone.digest == sched.digest
+
+
+# --------------------------------------------------------------------------- #
+# tool-timeout materializer
+# --------------------------------------------------------------------------- #
+def _convs():
+    return [Conversation(cid=0, arrival_s=0.0, turns=[
+                Turn(append_tokens=8, output_tokens=4, tool_time_s=0.01),
+                Turn(append_tokens=4, output_tokens=4, tool_time_s=0.0)]),
+            Conversation(cid=1, arrival_s=0.1, turns=[
+                Turn(append_tokens=8, output_tokens=4, tool_time_s=0.0)])]
+
+
+def test_apply_tool_timeouts_mutates_a_copy():
+    convs = _convs()
+    sched = generate_chaos_schedule(5, [1, 2])
+    deadline = 0.5
+    out = apply_tool_timeouts(convs, sched, deadline)
+    # the original workload is untouched (same workload feeds the baseline)
+    assert all(t.tool_time_s <= 0.01 for c in convs for t in c.turns)
+    # the victim's mid-turn tool wait is inflated past the watchdog deadline
+    victims = [t for c in out for t in c.turns
+               if t.tool_time_s >= 3.0 * deadline]
+    assert len(victims) == len(sched.of_kind(FAULT_TOOL_TIMEOUT))
+
+
+def test_apply_tool_timeouts_needs_a_multi_turn_victim():
+    single = [Conversation(cid=0, arrival_s=0.0, turns=[
+        Turn(append_tokens=8, output_tokens=4, tool_time_s=0.0)])]
+    sched = generate_chaos_schedule(5, [1, 2])
+    with pytest.raises(ValueError, match="no multi-turn conversation"):
+        apply_tool_timeouts(single, sched, 0.5)
+
+
+# --------------------------------------------------------------------------- #
+# placement monitor: a pure bus subscriber over synthetic lifecycle events
+# --------------------------------------------------------------------------- #
+class _FakeRuntime:
+    """bus + view is the monitor's whole surface — NodeState stand-ins are
+    enough to exercise the placement contract without a runtime."""
+
+    def __init__(self):
+        self.bus = EventBus()
+        self._nodes = {
+            1: SimpleNamespace(alive=True, lifecycle=NODE_ACTIVE),
+            2: SimpleNamespace(alive=False, lifecycle=NODE_ACTIVE),
+            3: SimpleNamespace(alive=True, lifecycle=NODE_QUARANTINED),
+        }
+        self.view = SimpleNamespace(node=self._nodes.__getitem__)
+
+
+def test_monitor_accepts_active_and_counts_post_join_admits():
+    rt = _FakeRuntime()
+    mon = PlacementMonitor(rt)
+    rt.bus.publish(ServeEvent(EV_ADMISSION_ADMIT, 1.0, cid=7, node_id=1))
+    assert not mon.violations and mon.post_join_admits == {}
+    rt.bus.publish(ServeEvent(EV_NODE_JOIN, 2.0, node_id=1,
+                              data={"reason": "from_dead"}))
+    rt.bus.publish(ServeEvent(EV_ADMISSION_ADMIT, 3.0, cid=8, node_id=1))
+    assert mon.post_join_admits == {1: 1}
+    assert [m.kind for m in mon.lifecycle_log] == [EV_NODE_JOIN]
+    mon.close()
+
+
+@pytest.mark.parametrize("node_id,why", [(2, "dead"), (3, NODE_QUARANTINED)],
+                         ids=["dead", "quarantined"])
+def test_monitor_raises_on_bad_placement_target(node_id, why):
+    rt = _FakeRuntime()
+    mon = PlacementMonitor(rt)
+    ev = ServeEvent(EV_ADMISSION_PARK, 1.5, cid=9, node_id=node_id)
+    with pytest.raises(AssertionError, match=why):
+        rt.bus.publish(ev)
+    # the violation is ALSO recorded for the post-run checker
+    assert len(mon.violations) == 1 and why in mon.violations[0]
+    mon.close()
+
+
+def test_monitor_recovery_latency_and_availability():
+    rt = _FakeRuntime()
+    mon = PlacementMonitor(rt)
+    rt.bus.publish(ServeEvent(EV_NODE_FAILURE, 2.0, node_id=1))
+    rt.bus.publish(ServeEvent(EV_NODE_JOIN, 5.0, node_id=1,
+                              data={"reason": "from_dead"}))
+    assert mon.recovery_latencies() == [3.0]
+    # down [2, 5] of a [0, 10] window -> 70% schedulable
+    avail = mon.availability_timeline([1], 0.0, 10.0)
+    assert avail[1] == pytest.approx(0.7)
+    mon.close()
+
+
+def test_monitor_unsubscribes_on_close():
+    rt = _FakeRuntime()
+    mon = PlacementMonitor(rt)
+    mon.close()
+    rt.bus.publish(ServeEvent(EV_ADMISSION_ADMIT, 1.0, cid=1, node_id=2))
+    assert not mon.violations  # no longer listening
+
+
+# --------------------------------------------------------------------------- #
+# invariant checker surfaces the first broken contract
+# --------------------------------------------------------------------------- #
+def test_checker_names_missing_conversations():
+    rt = _FakeRuntime()
+    mon = PlacementMonitor(rt)
+    gw = SimpleNamespace(streams={}, runtime=rt)
+    sched = ChaosSchedule(seed=0, events=())
+    convs = _convs()
+    with pytest.raises(AssertionError, match="never completed"):
+        check_chaos_invariants([], gw, mon, sched, convs, {})
+    mon.close()
+
+
+def test_checker_names_stream_divergence():
+    rt = _FakeRuntime()
+    mon = PlacementMonitor(rt)
+    recs = [SimpleNamespace(cid=c.cid) for c in _convs()]
+    gw = SimpleNamespace(streams={(0, 0): [1, 2]}, runtime=rt)
+    sched = ChaosSchedule(seed=0, events=())
+    with pytest.raises(AssertionError, match="diverged"):
+        check_chaos_invariants(recs, gw, mon, sched, _convs(),
+                               {(0, 0): [1, 3]})
+    mon.close()
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end: the simulator chaos soak (the benchmark's own sim half) holds
+# the full contract — completion, stream identity, zero bad placements, a
+# kill -> rejoin cycle AND a quarantine round trip in one seeded run
+# --------------------------------------------------------------------------- #
+def test_sim_chaos_soak_holds_full_contract():
+    from benchmarks.chaos_soak import _sim_chaos
+
+    out = _sim_chaos(16, 20260807)
+    assert out["all_complete"] and out["streams_identical"]
+    assert out["zero_bad_placements"]
+    ev = out["evidence"]
+    assert ev["n_failures"] >= 1 and ev["n_quarantines"] >= 1
+    # every failure AND the quarantine produced a matching rejoin
+    assert ev["n_joins"] >= ev["n_failures"] + ev["n_quarantines"]
+    assert ev["n_transfer_retries"] >= 1
+    assert ev["post_join_admits"]  # the rejoined fleet observably served
+    assert all(l > 0 for l in ev["recovery_latencies_s"])
+    assert 0.0 < out["decoder_availability_fraction"] <= 1.0

@@ -21,6 +21,7 @@ from repro.core import make_scheduler
 from repro.core.conversation import Conversation, Turn
 from repro.core.metrics import summarize
 from repro.core.runtime import DECODING, TOOL_WAIT
+from repro.core.signals import NODE_ACTIVE
 from repro.engine import EngineServer, ReplicaEngine
 from repro.models import build_model
 
@@ -223,6 +224,68 @@ if HAVE_HYPOTHESIS:
     def test_any_failure_schedule_is_byte_identical(qwen, baseline, victim,
                                                     frac):
         _check_schedule(qwen, baseline, victim, frac)
+
+
+# --------------------------------------------------------------------------- #
+# lifecycle schedules: kill -> rejoin (+ an optional quarantine-armed
+# slowdown) keeps byte-identity; the rejoined replica ends ACTIVE
+# --------------------------------------------------------------------------- #
+def _check_lifecycle_schedule(qwen, baseline, victim, frac, rejoin_delta,
+                              slow=False):
+    """For ANY (victim decoder, kill time, rejoin delay) — optionally with a
+    sustained slowdown on the OTHER decoder ordered strictly after the
+    rejoin, so an ACTIVE decoder exists at every instant — every
+    conversation completes, every stream equals the failure-free run's byte
+    for byte, and the rejoined victim is back in the ACTIVE set at the end.
+    Whether the slowdown actually trips the quarantine depends on how much
+    observable work the straggler holds (the soak benchmark pins that
+    down); byte-identity and completion must hold either way."""
+    cfg, _, params = qwen
+    tokens, span = baseline
+    srv = _disagg(cfg, params, quarantine_k=3.0, quarantine_window=2)
+    t_kill = frac * span
+    t_rejoin = t_kill + rejoin_delta * span
+    srv.fail_replica(victim, t_kill).recover_replica(victim, t_rejoin)
+    if slow:
+        other = 3 - victim  # the one decode peer in the disagg pair
+        srv.inject_slowdown(other, 8.0, at_s=t_rejoin + 0.05 * span)
+        srv.inject_slowdown(other, 1.0, at_s=t_rejoin + 0.35 * span)
+    recs = srv.serve(_trace())
+    assert len(recs) == 4
+    assert all(s.done for s in srv.sessions.values())
+    assert srv.sampled_tokens == tokens
+    st = srv.states[victim]
+    assert st.alive and st.lifecycle == NODE_ACTIVE
+    srv.check_accounting()
+
+
+_LC_RNG = np.random.RandomState(20260808)
+_LC_SCHEDULES = [(int(_LC_RNG.randint(1, 3)),
+                  float(_LC_RNG.uniform(0.05, 0.5)),
+                  float(_LC_RNG.uniform(0.05, 0.2)),
+                  bool(_LC_RNG.randint(0, 2)))
+                 for _ in range(4)]
+
+
+@pytest.mark.parametrize(
+    "victim,frac,rejoin_delta,slow", _LC_SCHEDULES,
+    ids=[f"n{v}@{f:.2f}+{d:.2f}{'slow' if s else ''}"
+         for v, f, d, s in _LC_SCHEDULES])
+def test_seeded_lifecycle_schedule_is_byte_identical(qwen, baseline, victim,
+                                                     frac, rejoin_delta,
+                                                     slow):
+    _check_lifecycle_schedule(qwen, baseline, victim, frac, rejoin_delta,
+                              slow)
+
+
+if HAVE_HYPOTHESIS:
+    @ENGINE_SET
+    @given(victim=st.sampled_from([1, 2]), frac=st.floats(0.05, 0.5),
+           rejoin_delta=st.floats(0.05, 0.2), slow=st.booleans())
+    def test_any_lifecycle_schedule_is_byte_identical(
+            qwen, baseline, victim, frac, rejoin_delta, slow):
+        _check_lifecycle_schedule(qwen, baseline, victim, frac,
+                                  rejoin_delta, slow)
 
 
 def test_mixed_node_death_with_parked_arrivals(qwen):

@@ -62,9 +62,12 @@ def test_engine_gateway_streams_byte_identical(qwen):
     # health reads the same NodeState observables schedulers see
     h = gw.health()
     assert h["runtime_state"] == "closed" and h["n_done"] == 5
+    # a failure-free run sees zero lifecycle churn
+    assert h["n_node_joins"] == 0 and h["n_node_quarantines"] == 0
     for st in h["nodes"].values():
         assert {"kv_headroom_tokens", "queued_conversations",
-                "masked_forward_fraction"} <= set(st)
+                "masked_forward_fraction", "lifecycle"} <= set(st)
+        assert st["lifecycle"] == "ACTIVE"
 
 
 def test_engine_gateway_identical_under_replica_failure(qwen):
@@ -147,6 +150,11 @@ def test_circuit_breaker_sheds_without_crashing(qwen):
                 extra.pop(0)
             except GatewayOverloaded as e:
                 assert "watermark" in str(e) and "depths" in str(e)
+                # observed backoff hints ride on the error (read from
+                # NodeState at shed time, never predicted)
+                assert e.min_queue_depth is not None \
+                    and e.min_queue_depth >= 1
+                assert e.retry_after_s is not None and e.retry_after_s >= 0.0
                 shed = True
                 break
             if not extra:

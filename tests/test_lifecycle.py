@@ -1,0 +1,310 @@
+"""Replica lifecycle contract on BOTH backends: a failed node rejoins COLD
+(resident counters zero, observed-EMA history discarded, cumulative
+counters surviving) and serves again byte-identically; fail -> recover ->
+fail cycles are legal while recovering an alive node raises loudly; the
+simulator's observed-straggler quarantine round-trips (trip on observed
+TBT EMA vs fleet median, drain, rejoin when the observation recovers) with
+zero placements on the quarantined node; simulator transfer faults retry
+with the engine's exact bounded-backoff contract; and the gateway's
+overload error carries the observed queue-depth / drain-rate hints."""
+import asyncio
+
+import jax
+import pytest
+
+from repro.chaos import PlacementMonitor
+from repro.cluster.deployment import build_cluster
+from repro.configs import get_reduced
+from repro.core import make_scheduler
+from repro.core.conversation import Conversation, Turn
+from repro.core.events import EV_NODE_JOIN, EV_NODE_QUARANTINE
+from repro.core.signals import NODE_ACTIVE
+from repro.engine import EngineServer, ReplicaEngine
+from repro.models import build_model
+from repro.serve import GatewayOverloaded, ServeGateway
+from repro.traces import make_scenario
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _trace(n=4):
+    return [Conversation(cid=i, arrival_s=i * 1e-6, turns=[
+        Turn(append_tokens=24 + 4 * i, output_tokens=10, tool_time_s=0.05),
+        Turn(append_tokens=10 + 2 * i, output_tokens=8, tool_time_s=0.0),
+    ]) for i in range(n)]
+
+
+def _disagg(cfg, params, **kw):
+    reps = [ReplicaEngine(cfg, params, n_slots=6, max_ctx=256,
+                          replica_id=0, role="prefill"),
+            ReplicaEngine(cfg, params, n_slots=3, max_ctx=256,
+                          replica_id=1, role="decode"),
+            ReplicaEngine(cfg, params, n_slots=3, max_ctx=256,
+                          replica_id=2, role="decode")]
+    return EngineServer(make_scheduler("conserve"), reps,
+                        record_tokens=True, strict_accounting=True, **kw)
+
+
+@pytest.fixture(scope="module")
+def baseline(qwen):
+    cfg, _, params = qwen
+    srv = _disagg(cfg, params)
+    recs = srv.serve(_trace())
+    assert len(recs) == 4
+    span = max(t.last_token_s for r in recs for t in r.turns)
+    return srv.sampled_tokens, span
+
+
+# --------------------------------------------------------------------------- #
+# engine: rejoin is COLD and the rejoined node re-enters service
+# --------------------------------------------------------------------------- #
+def test_engine_rejoin_is_cold_and_byte_identical(qwen, baseline):
+    cfg, _, params = qwen
+    tokens, span = baseline
+    srv = _disagg(cfg, params)
+    srv.fail_replica(1, 0.25 * span)
+    srv.recover_replica(1, 0.55 * span)
+
+    # capture the node's state AT the rejoin moment, before the admission
+    # pump can land fresh work on it
+    at_rejoin = {}
+    orig = srv._rejoin_node
+
+    def spy(node_id, t, reason):
+        st = srv.states[node_id]
+        at_rejoin.update(node_id=node_id, reason=reason, alive=st.alive,
+                         lifecycle=st.lifecycle, kv=st.active_kv_tokens,
+                         slots=st.used_slots, convs=st.active_conversations,
+                         ema=st.observed_tbt_ema_s)
+        return orig(node_id, t, reason=reason)
+
+    srv._rejoin_node = spy
+    recs = srv.serve(_trace())
+    assert len(recs) == 4
+    assert srv.sampled_tokens == tokens  # byte-identity across the cycle
+    # cold at rejoin: zero resident state, no inherited EMA history
+    assert at_rejoin == dict(node_id=1, reason="from_dead", alive=True,
+                             lifecycle=NODE_ACTIVE, kv=0, slots=0, convs=0,
+                             ema=0.0)
+    # and back in the schedulable set at the end
+    st = srv.states[1]
+    assert st.alive and st.lifecycle == NODE_ACTIVE
+    assert any(n.node_id == 1 for n in srv.view.nodes())
+    srv.check_accounting()
+
+
+def test_engine_fail_recover_fail_cycle(qwen, baseline):
+    """fail -> recover -> fail -> recover on one replica: per-node
+    generations keep the incarnations apart and streams stay identical."""
+    cfg, _, params = qwen
+    tokens, span = baseline
+    srv = _disagg(cfg, params)
+    srv.fail_replica(1, 0.2 * span).recover_replica(1, 0.4 * span)
+    srv.fail_replica(1, 0.6 * span).recover_replica(1, 0.8 * span)
+    recs = srv.serve(_trace())
+    assert len(recs) == 4
+    assert srv.sampled_tokens == tokens
+    assert srv.states[1].alive
+    srv.check_accounting()
+
+
+def test_engine_recover_alive_replica_raises(qwen):
+    cfg, _, params = qwen
+    srv = _disagg(cfg, params)
+    srv.recover_replica(1, 0.0)  # node 1 never died
+    with pytest.raises(RuntimeError, match="already alive"):
+        srv.serve(_trace(2))
+
+
+# --------------------------------------------------------------------------- #
+# simulator: same rejoin contract, same error text shape
+# --------------------------------------------------------------------------- #
+def _sim(**kw):
+    return build_cluster(make_scheduler("conserve"), n_prefill=1,
+                         n_decode=2, strict_accounting=True, **kw)
+
+
+def _sim_workload(n=10):
+    return make_scenario("pareto_burst", n, seed=5, scale="paper")
+
+
+def _counts(recs):
+    return {(r.cid, i): t.n_output_tokens
+            for r in recs for i, t in enumerate(r.turns)}
+
+
+@pytest.fixture(scope="module")
+def sim_baseline():
+    recs = _sim().serve(_sim_workload())
+    span = max(t.last_token_s for r in recs for t in r.turns)
+    return _counts(recs), span
+
+
+def test_sim_revive_is_cold_and_identical(sim_baseline):
+    counts, span = sim_baseline
+    sim = _sim()
+    sim.inject_failure(1, 0.3 * span)
+    sim.revive_node(1, 0.55 * span)
+    recs = sim.serve(_sim_workload())
+    assert _counts(recs) == counts
+    node = sim.nodes[1]
+    assert node.alive and node.state.lifecycle == NODE_ACTIVE
+    assert node.gen >= 1  # the revival opened a new incarnation
+    assert any(n.node_id == 1 for n in sim.view.nodes())
+    sim.check_accounting()
+
+
+def test_sim_fail_revive_fail_cycle(sim_baseline):
+    counts, span = sim_baseline
+    sim = _sim()
+    sim.inject_failure(1, 0.2 * span)
+    sim.revive_node(1, 0.4 * span)
+    sim.inject_failure(1, 0.6 * span)
+    sim.revive_node(1, 0.8 * span)
+    recs = sim.serve(_sim_workload())
+    assert _counts(recs) == counts
+    assert sim.nodes[1].gen >= 2
+    sim.check_accounting()
+
+
+def test_sim_revive_alive_node_raises():
+    sim = _sim()
+    sim.revive_node(1, 0.0)
+    with pytest.raises(RuntimeError, match="already alive"):
+        sim.serve(_sim_workload(3))
+
+
+# --------------------------------------------------------------------------- #
+# simulator: observed-straggler quarantine round trip
+# --------------------------------------------------------------------------- #
+def test_sim_quarantine_round_trip_observation_only():
+    """A sustained slowdown on one decoder trips the quarantine purely from
+    its observed TBT EMA vs the fleet median; while quarantined it takes no
+    placements (PlacementMonitor raises otherwise); when the slowdown lifts
+    and the EMA decays back under the rejoin threshold it re-enters service
+    — and the per-turn counts never change (slow, not wrong)."""
+    def mk(**kw):
+        return build_cluster(make_scheduler("conserve"), n_prefill=1,
+                             n_decode=3, strict_accounting=True, **kw)
+
+    half = 8
+    convs = (make_scenario("shared_preamble_fleet", half, seed=2,
+                           scale="paper")
+             + make_scenario("pareto_burst", half, seed=7, scale="paper",
+                             cid_offset=1000, arrival_offset_s=0.05))
+    base_recs = mk().serve(convs)
+    span = max(t.last_token_s for r in base_recs for t in r.turns)
+    counts = _counts(base_recs)
+
+    sim = mk(quarantine_k=3.0, quarantine_window=2)
+    sim.inject_slowdown(1, 10.0, at_s=0.30 * span)
+    sim.inject_slowdown(1, 1.0, at_s=0.55 * span)
+    monitor = PlacementMonitor(sim)
+    events = []
+    unsub = sim.bus.subscribe(lambda ev: events.append(ev),
+                              kinds=[EV_NODE_QUARANTINE, EV_NODE_JOIN])
+    recs = sim.serve(convs)
+    unsub()
+    monitor.close()
+
+    assert _counts(recs) == counts  # slow, never wrong
+    q = [ev for ev in events if ev.kind == EV_NODE_QUARANTINE]
+    rejoins = [ev for ev in events if ev.kind == EV_NODE_JOIN
+               and ev.data.get("reason") == "from_quarantine"]
+    assert q and q[0].node_id == 1
+    # the trigger's evidence is the observation itself
+    assert q[0].data["observed_tbt_ema_s"] > \
+        3.0 * q[0].data["fleet_median_tbt_s"]
+    assert rejoins and rejoins[0].node_id == 1
+    assert rejoins[0].t > q[0].t
+    assert not monitor.violations  # nothing placed on the straggler
+    assert sim.nodes[1].state.lifecycle == NODE_ACTIVE
+    sim.check_accounting()
+
+
+# --------------------------------------------------------------------------- #
+# simulator: injectable transfer faults, engine-parity bounded retry
+# --------------------------------------------------------------------------- #
+def test_sim_transfer_fault_retries_to_success(sim_baseline):
+    counts, _ = sim_baseline
+    sim = _sim()
+    sim.inject_transfer_faults(1)
+    recs = sim.serve(_sim_workload())
+    assert sim.n_transfer_retries == 1
+    assert _counts(recs) == counts  # faults never change content
+    sim.check_accounting()
+
+
+def test_sim_transfer_fault_exhaustion_raises():
+    sim = _sim(max_transfer_retries=2)
+    sim.inject_transfer_faults(100)  # every attempt of every binding faults
+    with pytest.raises(RuntimeError, match="consecutive attempts"):
+        sim.serve(_sim_workload(4))
+
+
+# --------------------------------------------------------------------------- #
+# gateway health surfaces the lifecycle observables
+# --------------------------------------------------------------------------- #
+def test_gateway_health_surfaces_lifecycle(sim_baseline):
+    from repro.serve import serve_scenario_live
+
+    counts, span = sim_baseline
+    sim = _sim()
+    sim.inject_failure(1, 0.3 * span)
+    sim.revive_node(1, 0.55 * span)
+    recs, gw, _ = serve_scenario_live(sim, _sim_workload())
+    assert _counts(recs) == counts
+    h = gw.health()
+    assert h["n_node_joins"] >= 1 and h["n_node_quarantines"] == 0
+    lifecycles = {st["lifecycle"] for st in h["nodes"].values()}
+    assert lifecycles == {NODE_ACTIVE}  # everyone back in service at the end
+
+
+# --------------------------------------------------------------------------- #
+# gateway overload carries observed backoff hints (read from NodeState)
+# --------------------------------------------------------------------------- #
+def test_gateway_overload_reports_observed_hints(qwen):
+    cfg, _, params = qwen
+    reps = [ReplicaEngine(cfg, params, n_slots=1, max_ctx=1024,
+                          replica_id=i, role="mixed") for i in (0, 1)]
+    srv = EngineServer(make_scheduler("conserve"), reps,
+                       record_tokens=True, strict_accounting=True)
+    burst = make_scenario("pareto_burst", 8, seed=9, scale="engine")
+    for c in burst:
+        c.arrival_s = 0.0
+    extra = make_scenario("pareto_burst", 4, seed=11, scale="engine",
+                          cid_offset=100)
+
+    async def run():
+        gw = ServeGateway(srv, shed_watermark=0, max_events_per_tick=8)
+        gw.start()
+        gw.submit(burst)
+        err = None
+        pending = list(extra)
+        for _ in range(2000):
+            await asyncio.sleep(0)
+            if not pending:
+                break
+            try:
+                gw.submit([pending[0]])
+                pending.pop(0)
+            except GatewayOverloaded as e:
+                err = e
+                break
+        await gw.drain()
+        return err
+
+    err = asyncio.run(run())
+    if err is None:
+        pytest.skip("burst drained without ever saturating every queue")
+    assert err.min_queue_depth is not None and err.min_queue_depth >= 1
+    assert err.retry_after_s is not None and err.retry_after_s >= 0.0
+    # the hint is derived from observation; with decode activity observed it
+    # must be a positive finite backoff
+    assert err.retry_after_s < 1e6
